@@ -1,0 +1,59 @@
+"""Paper Fig. 5 + Table 2: AMIH vs linear scan, 64/128-bit, K in {1,10,100}.
+
+The paper sweeps SIFT-1B/TRC2 up to 10^9 items on a 256 GB machine; this
+container sweeps synthetic AQBC-like clustered codes up to 10^6 (env
+REPRO_BENCH_MAX_N overrides) and validates the paper's *claims*:
+query time growing ~sqrt(n) for AMIH vs linearly for scan, speedups
+growing with n into orders of magnitude.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import AMIHIndex, linear_scan_knn
+
+from .common import make_db, make_queries, timer, write_csv
+
+
+def run(max_n: int | None = None, nq: int = 20):
+    max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
+    sizes = [n for n in (10_000, 100_000, 1_000_000, 10_000_000) if n <= max_n]
+    rows = []
+    for p in (64, 128):
+        for n in sizes:
+            db_bits, db = make_db(n, p, seed=0)
+            _, qs = make_queries(db_bits, nq, seed=1)
+            t_build0 = time.perf_counter()
+            idx = AMIHIndex.build(db, p)
+            t_build = time.perf_counter() - t_build0
+            for K in (1, 10, 100):
+                t_amih = np.median([
+                    timer(idx.knn, q, K, repeat=1) for q in qs
+                ])
+                t_scan = np.median([
+                    timer(linear_scan_knn, q, db, K, repeat=1) for q in qs
+                ])
+                rows.append({
+                    "p": p, "n": n, "K": K, "m_tables": idx.m,
+                    "amih_ms": round(t_amih * 1e3, 4),
+                    "scan_ms": round(t_scan * 1e3, 4),
+                    "speedup": round(t_scan / max(t_amih, 1e-9), 2),
+                    "index_build_s": round(t_build, 3),
+                })
+                print(
+                    f"p={p} n={n:>9} K={K:>3} m={idx.m} "
+                    f"amih={rows[-1]['amih_ms']:.3f}ms "
+                    f"scan={rows[-1]['scan_ms']:.3f}ms "
+                    f"speedup={rows[-1]['speedup']}x"
+                )
+    path = write_csv("amih_vs_scan.csv", rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

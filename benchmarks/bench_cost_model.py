@@ -1,0 +1,62 @@
+"""Paper Eq. 14: measured candidate counts vs the n^{H((r1+r2)/p)} cost
+model — validating the sublinear-cost claim that concludes §5.2."""
+
+from __future__ import annotations
+
+import math
+import os
+
+import numpy as np
+
+from repro.core import AMIHIndex, AMIHStats
+
+from .common import make_db, make_queries, write_csv
+
+
+def binary_entropy(a: float) -> float:
+    if a <= 0 or a >= 1:
+        return 0.0
+    return -a * math.log2(a) - (1 - a) * math.log2(1 - a)
+
+
+def run():
+    max_n = int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
+    p, K = 64, 10
+    rows = []
+    for n in (10_000, 100_000, 1_000_000):
+        if n > max_n:
+            continue
+        db_bits, db = make_db(n, p, seed=0, mode="uniform")
+        _, qs = make_queries(db_bits, 25, seed=1)
+        idx = AMIHIndex.build(db, p)
+        probes, verified, radii = [], [], []
+        for q in qs:
+            st = AMIHStats()
+            idx.knn(q, K, stats=st)
+            probes.append(st.probes)
+            verified.append(st.verified)
+            radii.append(st.max_radius)
+        r = float(np.mean(radii))
+        pred = (p / max(1.0, math.log2(n))) * n ** binary_entropy(r / p)
+        cost = float(np.mean(probes)) + float(np.mean(verified))
+        rows.append({
+            "n": n, "p": p, "K": K, "m": idx.m,
+            "avg_radius": round(r, 2),
+            "avg_probes": round(float(np.mean(probes)), 1),
+            "avg_verified": round(float(np.mean(verified)), 1),
+            "measured_cost": round(cost, 1),
+            "eq14_prediction": round(pred, 1),
+            "cost_over_n": round(cost / n, 5),
+        })
+        print(f"n={n:>8}: cost {cost:10.1f} vs Eq.14 {pred:10.1f} "
+              f"(cost/n = {cost/n:.5f})")
+    # the claim: cost/n falls as n grows (sublinearity)
+    fracs = [r["cost_over_n"] for r in rows]
+    assert all(a >= b for a, b in zip(fracs, fracs[1:])), fracs
+    path = write_csv("cost_model_eq14.csv", rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 7: AMIH indexing (build) time vs dataset size, 64/128-bit."""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import AMIHIndex
+
+from .common import make_db, write_csv
+
+
+def run():
+    max_n = int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
+    rows = []
+    for p in (64, 128):
+        for n in (10_000, 100_000, 1_000_000):
+            if n > max_n:
+                continue
+            _, db = make_db(n, p, seed=0)
+            t0 = time.perf_counter()
+            idx = AMIHIndex.build(db, p)
+            dt = time.perf_counter() - t0
+            rows.append({
+                "p": p, "n": n, "m_tables": idx.m,
+                "build_s": round(dt, 3),
+                "ns_per_item": round(1e9 * dt / n, 1),
+            })
+            print(f"p={p} n={n:>8}: build {dt:.3f}s "
+                  f"({rows[-1]['ns_per_item']} ns/item, m={idx.m})")
+    path = write_csv("indexing_time.csv", rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Paper Fig. 6: percentage of queries whose search radius exceeds r-hat
+(the Prop-2 closed-form region) — falls with n, grows with code length."""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.core import AMIHIndex, AMIHStats
+
+from .common import make_db, make_queries, write_csv
+
+
+def run():
+    max_n = int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
+    rows = []
+    for p in (32, 64, 128):
+        for n in (10_000, 100_000, 1_000_000):
+            if n > max_n:
+                continue
+            db_bits, db = make_db(n, p, seed=0)
+            _, qs = make_queries(db_bits, 30, seed=1)
+            idx = AMIHIndex.build(db, p)
+            exceeded = 0
+            radii = []
+            for q in qs:
+                st = AMIHStats()
+                idx.knn(q, 10, stats=st)
+                exceeded += int(st.exceeded_rhat)
+                radii.append(st.max_radius)
+            rows.append({
+                "p": p, "n": n, "K": 10,
+                "pct_exceeded_rhat": round(100.0 * exceeded / len(qs), 1),
+                "avg_max_radius": round(float(np.mean(radii)), 2),
+            })
+            print(f"p={p} n={n:>8}: {rows[-1]['pct_exceeded_rhat']}% "
+                  f"exceeded r-hat (avg radius {rows[-1]['avg_max_radius']})")
+    path = write_csv("rhat_exceedance.csv", rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

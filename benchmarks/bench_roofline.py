@@ -1,0 +1,75 @@
+"""§Roofline deliverable: aggregate the dry-run artifacts into the
+per-(arch x shape x mesh) roofline table with dominant-term analysis.
+
+Reads artifacts/dryrun/*.json produced by ``python -m repro.launch.dryrun
+--all --mesh both``. Does NOT lower anything itself (that is the dry-run's
+job) — run the dry-run first."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import write_csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "artifacts/dryrun")
+
+MITIGATION = {
+    "compute": "raise arithmetic intensity: larger per-chip batch or fewer"
+               " remat recomputes",
+    "memory": "cut HBM traffic: fuse attention/softmax chains (Pallas),"
+              " bf16 params/activations, int8 optimizer moments",
+    "collective": "reshard to keep tokens local: EP all-to-all instead of"
+                  " capacity scatter, overlap collectives with compute",
+}
+
+
+def run():
+    if not os.path.isdir(DRYRUN_DIR):
+        print(f"no dry-run artifacts at {DRYRUN_DIR}; run "
+              "`python -m repro.launch.dryrun --all --mesh both` first")
+        return []
+    rows = []
+    for name in sorted(os.listdir(DRYRUN_DIR)):
+        if not name.endswith(".json"):
+            continue
+        with open(os.path.join(DRYRUN_DIR, name)) as f:
+            r = json.load(f)
+        if r.get("status") == "skip":
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": "skip", "note": r["reason"][:80],
+            })
+            continue
+        if r.get("status") != "ok":
+            continue
+        step = max(r.get("compute_s", 0), r.get("memory_s", 0),
+                   r.get("collective_s", 0))
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "status": "ok",
+            "compute_s": round(r.get("compute_s", 0), 4),
+            "memory_s": round(r.get("memory_s", 0), 4),
+            "collective_s": round(r.get("collective_s", 0), 4),
+            "dominant": r.get("dominant", ""),
+            "step_s": round(step, 4),
+            "model_flops": f"{r.get('model_flops', 0):.3e}",
+            "hlo_flops": f"{r.get('hlo_total_flops', 0):.3e}",
+            "useful_ratio": round(r.get("useful_ratio", 0), 4),
+            "GiB_per_dev": round(r.get("bytes_per_device", 0) / 2**30, 2),
+            "note": MITIGATION.get(r.get("dominant", ""), "")[:60],
+        })
+    ok = [r for r in rows if r["status"] == "ok"]
+    print(f"{len(ok)} compiled cells, "
+          f"{sum(1 for r in rows if r['status'] == 'skip')} recorded skips")
+    for r in ok:
+        print(f"{r['mesh']:>6} {r['arch']:<18} {r['shape']:<12} "
+              f"dom={r['dominant']:<10} step={r['step_s']:>9.3f}s "
+              f"useful={r['useful_ratio']:.3f}")
+    path = write_csv("roofline_table.csv", rows)
+    print(f"wrote {path}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

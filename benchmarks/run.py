@@ -1,0 +1,60 @@
+"""Benchmark driver: one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # quick tier
+    REPRO_BENCH_MAX_N=10000000 python -m benchmarks.run  # big sweep
+
+Artifacts land in artifacts/bench/*.csv; the mapping to paper figures is
+documented in DESIGN.md §8 and EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    t0 = time.time()
+    # keep the default tier CI-sized; export REPRO_BENCH_MAX_N to go big
+    os.environ.setdefault("REPRO_BENCH_MAX_N", "200000")
+    os.environ.setdefault("REPRO_BENCH_RECALL_N", "20000")
+    from . import (
+        bench_amih_vs_scan,
+        bench_cost_model,
+        bench_indexing,
+        bench_kernels,
+        bench_probings,
+        bench_recall,
+        bench_rhat,
+        bench_roofline,
+    )
+
+    suites = [
+        ("Fig3_probings_single_table", bench_probings.run),
+        ("Fig5_Table2_amih_vs_scan", bench_amih_vs_scan.run),
+        ("Fig6_rhat_exceedance", bench_rhat.run),
+        ("Fig7_indexing_time", bench_indexing.run),
+        ("Fig8_9_recall_vs_baselines", bench_recall.run),
+        ("Eq14_cost_model", bench_cost_model.run),
+        ("kernel_scan_throughput", bench_kernels.run),
+        ("roofline_table", bench_roofline.run),
+    ]
+    failed = []
+    for name, fn in suites:
+        print(f"\n=== {name} {'=' * max(1, 60 - len(name))}")
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s; "
+          f"{len(suites) - len(failed)}/{len(suites)} suites passed")
+    if failed:
+        print("FAILED:", ", ".join(failed))
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

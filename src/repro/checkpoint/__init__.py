@@ -1,0 +1,5 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic-restorable."""
+
+from .checkpointer import Checkpointer, latest_step, restore, save
+
+__all__ = ["Checkpointer", "latest_step", "restore", "save"]

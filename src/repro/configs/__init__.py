@@ -1,0 +1,50 @@
+"""Assigned-architecture registry: one module per architecture.
+
+``get_config(name)`` returns the exact published configuration;
+``get_tiny(name)`` returns the reduced same-family config used by CPU smoke
+tests (full configs are exercised only by the allocation-free dry-run).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from ..models.common import ArchConfig
+
+ARCH_IDS: List[str] = [
+    "llava_next_34b",
+    "kimi_k2_1t_a32b",
+    "arctic_480b",
+    "whisper_tiny",
+    "granite_3_8b",
+    "llama3_8b",
+    "granite_34b",
+    "gemma_2b",
+    "hymba_1_5b",
+    "mamba2_1_3b",
+]
+
+# canonical dashed ids from the assignment -> module names
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name)
+    if name not in ARCH_IDS:
+        raise KeyError(
+            f"unknown architecture {name!r}; available: {sorted(ALIASES)}"
+        )
+    return importlib.import_module(f".{name}", __name__)
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_tiny(name: str) -> ArchConfig:
+    return _module(name).tiny()
+
+
+def all_configs():
+    return {a: get_config(a) for a in ARCH_IDS}

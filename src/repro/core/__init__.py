@@ -1,0 +1,45 @@
+"""The paper's primary contribution: exact angular KNN over binary codes.
+
+Public surface:
+  - probing_sequence / closed_form_prefix   (RQ1, Props 1-3)
+  - SingleTableIndex                        (single-table search, §4)
+  - AMIHIndex / AMIHStats                   (angular multi-index hashing, §5)
+  - linear_scan_knn                         (the paper's baseline)
+  - aqbc                                    (binarization used in §6)
+  - distributed                             (sharded scan for pod-scale DBs)
+"""
+
+from .amih import AMIHIndex, AMIHStats, default_num_tables
+from .linear_scan import linear_scan_knn, sims_against_db
+from .packing import (
+    hamming_tuples,
+    n_words,
+    pack_bits,
+    popcount,
+    substring_spans,
+    unpack_bits,
+)
+from .probing import closed_form_prefix, probing_sequence
+from .single_table import SearchStats, SingleTableIndex
+from .tuples import rhat, sim_value, tuple_count
+
+__all__ = [
+    "AMIHIndex",
+    "AMIHStats",
+    "SearchStats",
+    "SingleTableIndex",
+    "closed_form_prefix",
+    "default_num_tables",
+    "hamming_tuples",
+    "linear_scan_knn",
+    "n_words",
+    "pack_bits",
+    "popcount",
+    "probing_sequence",
+    "rhat",
+    "sim_value",
+    "sims_against_db",
+    "substring_spans",
+    "tuple_count",
+    "unpack_bits",
+]

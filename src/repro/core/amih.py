@@ -1,0 +1,297 @@
+"""Angular Multi-Index Hashing — the paper's primary contribution (§5, RQ2).
+
+Long p-bit codes are split into ``m`` disjoint substrings; each substring is
+indexed in its own table (CSR-sorted, see single_table.py). An exact angular
+KNN query walks the full-code tuple sequence (probing.py) in decreasing-sim
+order; before emitting the codes at full tuple ``(r1, r2)`` it performs the
+substring probes required by Proposition 4:
+
+    T_{r1,r2,m} = { (a, b) : a + b <= floor((r1+r2)/m), a <= r1, b <= r2 }
+
+probed in *every* table. Any code with Hamming tuple <= (r1, r2) — in
+particular, exactly (r1, r2) — is guaranteed (pigeonhole) to fall in one of
+those buckets, so emission order is exact. Retrieved candidates are verified
+once (dedup bitmap) by computing their exact full-code tuple with popcounts.
+
+Counters mirror the paper's cost model (Eq. 13): probes (bucket lookups) and
+candidate verifications are the two cost terms.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .enumeration import tuple_bucket_values
+from .packing import (
+    WORD_DTYPE,
+    extract_substring,
+    hamming_tuples,
+    popcount,
+    substring_spans,
+)
+from .probing import probing_sequence
+from .tuples import rhat, sim_value
+
+__all__ = ["AMIHIndex", "AMIHStats", "default_num_tables"]
+
+# Sentinel stored in the per-query ``probed`` set once the query has
+# degraded to full verification (every id seen) — no more probing needed.
+_SCANNED = ("__scanned__",)
+
+
+def default_num_tables(p: int, n: int) -> int:
+    """Paper §5.2 / §6.2: m ≈ p / log2(n), clamped to [ceil(p/64), p].
+
+    The lower clamp keeps every substring <= 64 bits so bucket indices fit
+    an integer word (the paper's tables are likewise word-indexed).
+    """
+    m_min = (p + 63) // 64
+    if n < 2:
+        return m_min
+    m = int(round(p / max(1.0, math.log2(n))))
+    return max(m_min, min(p, m))
+
+
+@dataclass
+class AMIHStats:
+    probes: int = 0              # bucket lookups across all tables
+    retrieved: int = 0           # ids pulled from buckets (incl. cross-table dups)
+    verified: int = 0            # unique candidates tuple-verified
+    tuples_processed: int = 0    # full-code tuples traversed
+    substring_tuples_probed: int = 0
+    max_radius: int = 0
+    exceeded_rhat: bool = False
+    # The paper (§5) observes that when required probes exceed the dataset
+    # size, linear scan is the faster alternative. We make that a guard:
+    # once a single substring-tuple's bucket enumeration would cost more
+    # than verifying every stored code, the query degrades gracefully to a
+    # full verification pass (still exact).
+    fell_back_to_scan: bool = False
+
+
+@dataclass
+class _SubTable:
+    lo: int
+    hi: int
+    sorted_vals: np.ndarray = field(repr=False)
+    sorted_ids: np.ndarray = field(repr=False)
+
+    @property
+    def width(self) -> int:
+        return self.hi - self.lo
+
+    def probe(self, bucket_vals: np.ndarray) -> np.ndarray:
+        if bucket_vals.size == 0:
+            return np.empty(0, dtype=np.int64)
+        lo = np.searchsorted(self.sorted_vals, bucket_vals, side="left")
+        hi = np.searchsorted(self.sorted_vals, bucket_vals, side="right")
+        nz = hi > lo
+        if not nz.any():
+            return np.empty(0, dtype=np.int64)
+        parts = [self.sorted_ids[l:h] for l, h in zip(lo[nz], hi[nz])]
+        return np.concatenate(parts)
+
+
+@dataclass
+class AMIHIndex:
+    """Exact angular-KNN index over n packed p-bit codes."""
+
+    p: int
+    m: int
+    db_words: np.ndarray = field(repr=False)   # (n, W) uint32 — for verification
+    tables: List[_SubTable] = field(repr=False, default_factory=list)
+
+    # ------------------------------------------------------------- build
+    @classmethod
+    def build(
+        cls, db_words: np.ndarray, p: int, m: Optional[int] = None
+    ) -> "AMIHIndex":
+        db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
+        n = db_words.shape[0]
+        if m is None:
+            m = default_num_tables(p, n)
+        if p / m > 64:
+            raise ValueError(
+                f"m={m} gives substrings wider than 64 bits for p={p}; "
+                f"need m >= {(p + 63) // 64}"
+            )
+        tables = []
+        for (lo, hi) in substring_spans(p, m):
+            vals = extract_substring(db_words, lo, hi)
+            order = np.argsort(vals, kind="stable")
+            tables.append(
+                _SubTable(
+                    lo=lo,
+                    hi=hi,
+                    sorted_vals=vals[order],
+                    sorted_ids=np.arange(n, dtype=np.int64)[order],
+                )
+            )
+        return cls(p=p, m=m, db_words=db_words, tables=tables)
+
+    @property
+    def n(self) -> int:
+        return self.db_words.shape[0]
+
+    # ------------------------------------------------------------- search
+    def knn(
+        self,
+        q_words: np.ndarray,
+        k: int,
+        stats: Optional[AMIHStats] = None,
+        enumeration_cap: Optional[int] = 2_000_000,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact angular K nearest neighbors of a packed query.
+
+        Returns (ids, sims); deterministic up to ties inside the final
+        tuple (all codes of one tuple are exactly equidistant in angle).
+        """
+        q_words = np.asarray(q_words, dtype=WORD_DTYPE)
+        z = int(popcount(q_words[None, :])[0])
+        k = min(k, self.n)
+        if k == 0:
+            return np.empty(0, dtype=np.int64), np.empty(0)
+
+        q_subs = [
+            int(extract_substring(q_words[None, :], t.lo, t.hi)[0])
+            for t in self.tables
+        ]
+        z_subs = [int(v).bit_count() for v in q_subs]
+
+        seen = np.zeros(self.n, dtype=bool)
+        probed: set = set()                       # (table, a, b)
+        pending: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        out_ids: List[int] = []
+        out_sims: List[float] = []
+        r_hat = rhat(z)
+
+        for (r1, r2) in probing_sequence(self.p, z):
+            if stats is not None:
+                stats.tuples_processed += 1
+                stats.max_radius = max(stats.max_radius, r1 + r2)
+                if r1 + r2 > r_hat:
+                    stats.exceeded_rhat = True
+            self._probe_for_tuple(
+                q_words, r1, r2, q_subs, z_subs, probed, seen, pending,
+                stats, enumeration_cap,
+            )
+            hits = pending.pop((r1, r2), None)
+            if hits:
+                ids = np.sort(np.concatenate(hits))
+                s = sim_value(self.p, z, r1, r2)
+                take = min(ids.size, k - len(out_ids))
+                out_ids.extend(ids[:take].tolist())
+                out_sims.extend([s] * take)
+                if len(out_ids) >= k:
+                    break
+        return np.asarray(out_ids, dtype=np.int64), np.asarray(out_sims)
+
+    def search_radius(
+        self,
+        q_words: np.ndarray,
+        r1: int,
+        r2: int,
+        stats: Optional[AMIHStats] = None,
+        enumeration_cap: Optional[int] = 2_000_000,
+    ) -> np.ndarray:
+        """The (r1, r2)-near neighbor problem (Def. 4): all codes with
+        Hamming tuple <= (r1, r2) componentwise. Returns sorted ids."""
+        q_words = np.asarray(q_words, dtype=WORD_DTYPE)
+        q_subs = [
+            int(extract_substring(q_words[None, :], t.lo, t.hi)[0])
+            for t in self.tables
+        ]
+        z_subs = [int(v).bit_count() for v in q_subs]
+        seen = np.zeros(self.n, dtype=bool)
+        pending: Dict[Tuple[int, int], List[np.ndarray]] = {}
+        self._probe_for_tuple(
+            q_words, r1, r2, q_subs, z_subs, set(), seen, pending, stats,
+            enumeration_cap,
+        )
+        matches = [
+            np.concatenate(v)
+            for (e1, e2), v in pending.items()
+            if e1 <= r1 and e2 <= r2
+        ]
+        if not matches:
+            return np.empty(0, dtype=np.int64)
+        return np.sort(np.concatenate(matches))
+
+    # ------------------------------------------------------------ private
+    def _probe_for_tuple(
+        self,
+        q_words: np.ndarray,
+        r1: int,
+        r2: int,
+        q_subs: List[int],
+        z_subs: List[int],
+        probed: set,
+        seen: np.ndarray,
+        pending: Dict[Tuple[int, int], List[np.ndarray]],
+        stats: Optional[AMIHStats],
+        enumeration_cap: Optional[int],
+    ) -> None:
+        """Run all not-yet-done probes required by T_{r1,r2,m} (Prop. 4),
+        verify new candidates, and bucket them by exact full tuple.
+
+        Cost guard: if a single substring-tuple enumeration would probe more
+        buckets than there are stored codes (or than ``enumeration_cap``),
+        bucket probing has lost to exhaustive verification — we verify every
+        not-yet-seen code instead (exact; the paper's §5 observation that
+        "linear scan is a faster alternative" past that point). The
+        ``_SCANNED`` sentinel in ``probed`` short-circuits later tuples.
+        """
+        if _SCANNED in probed:
+            return
+        rsub = (r1 + r2) // self.m
+        new_ids: List[np.ndarray] = []
+        todo = [
+            (s, a, b)
+            for s, table in enumerate(self.tables)
+            for a in range(min(r1, z_subs[s], rsub) + 1)
+            for b in range(min(r2, table.width - z_subs[s], rsub - a) + 1)
+            if (s, a, b) not in probed
+        ]
+        for (s, a, b) in todo:
+            probed.add((s, a, b))
+            table = self.tables[s]
+            w_s, z_s = table.width, z_subs[s]
+            n_buckets = math.comb(z_s, a) * math.comb(w_s - z_s, b)
+            cap = min(enumeration_cap or self.n, max(self.n, 1))
+            if n_buckets > cap:
+                probed.add(_SCANNED)
+                fresh = np.flatnonzero(~seen)
+                seen[:] = True
+                if fresh.size:
+                    new_ids.append(fresh)
+                if stats is not None:
+                    stats.fell_back_to_scan = True
+                    stats.retrieved += fresh.size
+                break
+            buckets = tuple_bucket_values(q_subs[s], w_s, z_s, a, b, cap=None)
+            if stats is not None:
+                stats.substring_tuples_probed += 1
+                stats.probes += len(buckets)
+            ids = table.probe(buckets)
+            if stats is not None:
+                stats.retrieved += len(ids)
+            if ids.size:
+                fresh = ids[~seen[ids]]
+                if fresh.size:
+                    seen[fresh] = True
+                    new_ids.append(fresh)
+        if new_ids:
+            cand = np.concatenate(new_ids)
+            if stats is not None:
+                stats.verified += cand.size
+            # exact full-code tuples for all new candidates, vectorized
+            e1, e2 = hamming_tuples(q_words, self.db_words[cand])
+            for t in np.unique(np.stack([e1, e2], axis=1), axis=0):
+                mask = (e1 == t[0]) & (e2 == t[1])
+                pending.setdefault((int(t[0]), int(t[1])), []).append(
+                    cand[mask]
+                )

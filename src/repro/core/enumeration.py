@@ -1,0 +1,70 @@
+"""Bucket-index enumeration for a tuple (Eq. 4 support).
+
+Given a query substring value ``q`` (as a python int over ``w`` bits with
+``z`` ones), the codes at exactly tuple ``(a, b)`` are obtained by flipping
+``a`` of the one-bits and ``b`` of the zero-bits:
+
+    { q ^ (m1 | m0) : m1 in C(ones(q), a), m0 in C(zeros(q), b) }
+
+There are C(z, a) * C(w - z, b) of them (Eq. 4). Enumeration cost is linear
+in the output size; AMIH keeps a, b small so this never explodes, but a
+safety ``cap`` is enforced and surfaced to the caller.
+"""
+
+from __future__ import annotations
+
+import math
+from itertools import combinations
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["bit_positions", "combination_masks", "tuple_bucket_values"]
+
+
+def bit_positions(value: int, width: int) -> List[int]:
+    """Positions (LSB-first) of set bits of ``value`` within ``width`` bits."""
+    return [j for j in range(width) if (value >> j) & 1]
+
+
+def combination_masks(positions: List[int], k: int) -> np.ndarray:
+    """All C(len(positions), k) OR-masks of k distinct positions, uint64."""
+    n = len(positions)
+    cnt = math.comb(n, k)
+    out = np.empty(cnt, dtype=np.uint64)
+    for i, combo in enumerate(combinations(positions, k)):
+        m = 0
+        for pos in combo:
+            m |= 1 << pos
+        out[i] = m
+    return out
+
+
+def tuple_bucket_values(
+    q_value: int,
+    width: int,
+    z: int,
+    a: int,
+    b: int,
+    cap: Optional[int] = None,
+) -> np.ndarray:
+    """All bucket indices at exactly tuple (a, b) from the query substring.
+
+    Returns a uint64 array of length C(z, a) * C(width - z, b).
+    Raises ValueError if the count exceeds ``cap`` (guard against probing
+    blowup; AMIH's tuple schedule keeps a+b <= floor(r/m) so this is small).
+    """
+    if not (0 <= a <= z and 0 <= b <= width - z):
+        return np.empty(0, dtype=np.uint64)
+    count = math.comb(z, a) * math.comb(width - z, b)
+    if cap is not None and count > cap:
+        raise ValueError(
+            f"bucket enumeration for tuple ({a},{b}) on width={width}, z={z} "
+            f"would produce {count} > cap={cap} buckets"
+        )
+    ones = bit_positions(q_value, width)
+    zeros = [j for j in range(width) if not (q_value >> j) & 1]
+    m1 = combination_masks(ones, a)          # flip 1 -> 0
+    m0 = combination_masks(zeros, b)         # flip 0 -> 1
+    masks = (m1[:, None] | m0[None, :]).reshape(-1)
+    return np.uint64(q_value) ^ masks

@@ -1,0 +1,55 @@
+"""Exhaustive angular KNN baseline (the paper's comparator, §6.2).
+
+Like the paper's optimized linear scan: sims are computed from the Hamming
+tuple (Eq. 3) via XOR/ANDN + popcount, norm terms come from a lookup table
+over the p+1 possible code norms, and sqrt(z) of the query is dropped from
+comparisons (it is query-constant).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+from .packing import WORD_DTYPE, hamming_tuples, popcount
+
+__all__ = ["linear_scan_knn", "sims_against_db"]
+
+
+def sims_against_db(q_words: np.ndarray, db_words: np.ndarray) -> np.ndarray:
+    """Cosine sims of every db code vs one query, via Eq. 3 (float64).
+
+    Zero-norm codes (or a zero query) get sim = 0.0 (see tuples.sim_value).
+    """
+    q_words = np.asarray(q_words, dtype=WORD_DTYPE)
+    z = int(popcount(q_words[None, :])[0])
+    r10, r01 = hamming_tuples(q_words, db_words)
+    if z == 0:
+        return np.zeros(r10.shape[0], dtype=np.float64)
+    norm_b_sq = (z - r10 + r01).astype(np.float64)
+    num = (z - r10).astype(np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        sims = num / (np.sqrt(float(z)) * np.sqrt(norm_b_sq))
+    sims = np.where(norm_b_sq == 0, 0.0, sims)
+    return sims
+
+
+def linear_scan_knn(
+    q_words: np.ndarray, db_words: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact angular KNN by exhaustive scan.
+
+    Returns (ids, sims), sorted by (-sim, id) for determinism. ``k`` is
+    clamped to the dataset size.
+    """
+    sims = sims_against_db(q_words, db_words)
+    n = sims.shape[0]
+    k = min(k, n)
+    if k == n:
+        idx = np.arange(n)
+    else:
+        idx = np.argpartition(-sims, k - 1)[:k]
+    order = np.lexsort((idx, -sims[idx]))
+    ids = idx[order]
+    return ids, sims[ids]

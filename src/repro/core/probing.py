@@ -1,0 +1,111 @@
+"""Probing-sequence generation (paper §4, RQ1, Props 1–3).
+
+Produces Hamming-distance tuples in monotonically non-increasing order of
+cosine similarity, using the paper's priority-queue + two-anchor algorithm:
+
+- popping tuple R = (x, y) pushes
+  * the **first anchor**: the max-sim tuple at distance x+y+1, i.e.
+    ``(c, x+y+1-c)`` with ``c = max(0, x+y+1-(p-z))`` (Prop. 1), and
+  * the **second anchor**: ``(x+1, y-1)`` — the next tuple at the same
+    distance in decreasing-sim direction (Prop. 1),
+  each pushed iff valid and not yet traversed.
+
+We initialize the queue with (0, 0) (the query's own bucket): the paper's
+closed-form phase for r <= rhat (Prop. 2) is an optimization of the same
+order, which we also implement (``closed_form_prefix``) and property-test
+for agreement. Priorities are exact rationals (sim^2 as Fraction) so tuple
+ordering is never corrupted by floating point; ties are broken by
+(ascending Hamming distance, ascending r1) for determinism.
+
+Degenerate queries: z == 0 makes cosine undefined for every code; we fall
+back to Hamming ordering (tuples are (0, r2), emitted by ascending r2), the
+natural limit. Codes that are themselves the zero vector sort last.
+"""
+
+from __future__ import annotations
+
+import heapq
+from fractions import Fraction
+from typing import Iterator, Optional, Tuple
+
+from .tuples import is_valid_tuple, rhat, sim_squared_fraction, sim_value
+
+__all__ = [
+    "probing_sequence",
+    "closed_form_prefix",
+    "first_anchor",
+    "second_anchor",
+]
+
+
+def first_anchor(p: int, z: int, x: int, y: int) -> Optional[Tuple[int, int]]:
+    """Max-sim tuple at Hamming distance x+y+1 (paper Def. 5a)."""
+    d = x + y + 1
+    c = max(0, d - (p - z))
+    t = (c, d - c)
+    return t if is_valid_tuple(p, z, *t) else None
+
+
+def second_anchor(p: int, z: int, x: int, y: int) -> Optional[Tuple[int, int]]:
+    """Next-smaller-sim tuple at the same Hamming distance (paper Def. 5b)."""
+    t = (x + 1, y - 1)
+    return t if is_valid_tuple(p, z, *t) else None
+
+
+def _priority(p: int, z: int, t: Tuple[int, int]):
+    """Heap key: max-sim first; exact; deterministic tie-break."""
+    r1, r2 = t
+    if z == 0:
+        # Hamming order on the zero query: only (0, r2) tuples are valid.
+        return (Fraction(r2), 0, 0)
+    return (-sim_squared_fraction(p, z, r1, r2), r1 + r2, r1)
+
+
+def probing_sequence(
+    p: int, z: int, limit: Optional[int] = None
+) -> Iterator[Tuple[int, int]]:
+    """Yield all valid tuples for (p, z) in non-increasing sim order.
+
+    ``limit`` caps the number of tuples yielded (None = all
+    (z+1)*(p-z+1) of them).
+    """
+    if not 0 <= z <= p:
+        raise ValueError(f"need 0 <= z <= p, got z={z}, p={p}")
+    start = (0, 0)
+    heap = [(_priority(p, z, start), start)]
+    traversed = {start}
+    emitted = 0
+    while heap:
+        _, (x, y) = heapq.heappop(heap)
+        yield (x, y)
+        emitted += 1
+        if limit is not None and emitted >= limit:
+            return
+        for anchor in (first_anchor(p, z, x, y), second_anchor(p, z, x, y)):
+            if anchor is not None and anchor not in traversed:
+                traversed.add(anchor)
+                heapq.heappush(heap, (_priority(p, z, anchor), anchor))
+
+
+def closed_form_prefix(p: int, z: int):
+    """The provably-sorted prefix for r <= rhat (Props. 1–2, t=1).
+
+    Within the Hamming ball C(q, rhat), sim strictly decreases with the
+    Hamming distance, and within one distance r the order is
+    (0, r), (1, r-1), ..., (r, 0). Returns the list of valid tuples in
+    that closed-form order.
+    """
+    out = []
+    for r in range(rhat(z) + 1):
+        for r1 in range(r + 1):
+            t = (r1, r - r1)
+            if is_valid_tuple(p, z, *t):
+                out.append(t)
+    return out
+
+
+def probing_sequence_with_sims(p: int, z: int, limit: Optional[int] = None):
+    """Convenience for tests/benchmarks: [(tuple, sim_float), ...]."""
+    return [
+        (t, sim_value(p, z, *t)) for t in probing_sequence(p, z, limit=limit)
+    ]

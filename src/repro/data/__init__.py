@@ -1,0 +1,18 @@
+"""Data substrate: deterministic synthetic pipelines with checkpointable,
+shard-aware iterators (token streams for LM training; feature/code streams
+for the retrieval experiments)."""
+
+from .pipeline import DataConfig, TokenPipeline
+from .synthetic import (
+    clustered_features,
+    synthetic_binary_codes,
+    synthetic_queries,
+)
+
+__all__ = [
+    "DataConfig",
+    "TokenPipeline",
+    "clustered_features",
+    "synthetic_binary_codes",
+    "synthetic_queries",
+]

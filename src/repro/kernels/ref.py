@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference).
+
+All kernels operate on packed binary codes: uint32 words, LSB-first,
+W = ceil(p/32) words per code (see repro.core.packing). The popcount is a
+SWAR reduction (no native popcount in jnp on all backends).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "popcount32",
+    "tuples_ref",
+    "scores_ref",
+    "scan_scores_ref",
+    "verify_tuples_ref",
+]
+
+
+def popcount32(v: jnp.ndarray) -> jnp.ndarray:
+    """SWAR popcount of uint32 lanes -> int32 counts."""
+    v = v.astype(jnp.uint32)
+    v = v - ((v >> 1) & jnp.uint32(0x55555555))
+    v = (v & jnp.uint32(0x33333333)) + ((v >> 2) & jnp.uint32(0x33333333))
+    v = (v + (v >> 4)) & jnp.uint32(0x0F0F0F0F)
+    v = (v * jnp.uint32(0x01010101)) >> 24
+    return v.astype(jnp.int32)
+
+
+def tuples_ref(q_words: jnp.ndarray, db_words: jnp.ndarray):
+    """Hamming tuples of every (query, code) pair.
+
+    q_words: (B, W) uint32; db_words: (N, W) uint32
+    returns r10, r01: (B, N) int32.
+    """
+    q = q_words.astype(jnp.uint32)[:, None, :]
+    b = db_words.astype(jnp.uint32)[None, :, :]
+    r10 = popcount32(q & ~b).sum(axis=-1)
+    r01 = popcount32(~q & b).sum(axis=-1)
+    return r10.astype(jnp.int32), r01.astype(jnp.int32)
+
+
+def scores_from_tuples(z_q: jnp.ndarray, r10: jnp.ndarray, r01: jnp.ndarray):
+    """Eq. 3 cosine sims from tuples; zero-norm guards -> 0.0.
+
+    z_q: (B,) int32 query popcounts; r10, r01: (B, N) int32.
+    """
+    z = z_q.astype(jnp.float32)[:, None]
+    num = z - r10.astype(jnp.float32)
+    den_sq = z * (z - r10.astype(jnp.float32) + r01.astype(jnp.float32))
+    sims = num * jax_rsqrt_safe(den_sq)
+    return jnp.where(den_sq <= 0, 0.0, sims)
+
+
+def jax_rsqrt_safe(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(x > 0, 1.0 / jnp.sqrt(jnp.where(x > 0, x, 1.0)), 0.0)
+
+
+def scores_ref(q_words: jnp.ndarray, db_words: jnp.ndarray, z_q: jnp.ndarray):
+    """(B, N) float32 cosine sims of packed queries vs packed codes."""
+    r10, r01 = tuples_ref(q_words, db_words)
+    return scores_from_tuples(z_q, r10, r01)
+
+
+# aliases used by tests to mirror the kernel entry points
+scan_scores_ref = scores_ref
+
+
+def verify_tuples_ref(q_words: jnp.ndarray, cand_words: jnp.ndarray):
+    """Single query vs candidate block: (W,), (N, W) -> (r10, r01) (N,) int32."""
+    r10, r01 = tuples_ref(q_words[None, :], cand_words)
+    return r10[0], r01[0]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: batched Hamming-tuple verification (AMIH hot loop).
+
+After AMIH's bucket probes produce a candidate id list, each candidate's
+exact full-code tuple (r_1to0, r_0to1) must be computed to (a) confirm it is
+a true (r1, r2)-near neighbor and (b) place it in the emission order
+(paper §5.1 "final pruning"). One query is verified against a gathered
+candidate block:
+
+  grid = (N / BLK_N,); candidate block (BLK_N, W) in VMEM; the query's W
+  words are scalars broadcast against (1, BLK_N) word rows — all
+  intermediates are 2-D VPU tiles; SWAR popcount as in hamming_scan.
+
+Outputs are exact int32 tuples, so the test oracle comparison is equality,
+not allclose.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import popcount32
+
+DEFAULT_BLK_N = 1024
+
+
+def _verify_kernel(q_ref, cand_ref, r10_ref, r01_ref, *, n_words: int):
+    blk_n = cand_ref.shape[0]
+    r10 = jnp.zeros((1, blk_n), dtype=jnp.int32)
+    r01 = jnp.zeros((1, blk_n), dtype=jnp.int32)
+    for w in range(n_words):
+        qw = q_ref[0, w]                       # scalar uint32
+        cw = cand_ref[:, w][None, :]           # (1, BLK_N)
+        r10 = r10 + popcount32(qw & ~cw)
+        r01 = r01 + popcount32(~qw & cw)
+    r10_ref[...] = r10[0]
+    r01_ref[...] = r01[0]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_n", "interpret"))
+def verify_tuples(
+    q_words: jax.Array,
+    cand_words: jax.Array,
+    *,
+    blk_n: int = DEFAULT_BLK_N,
+    interpret: bool = True,
+):
+    """(W,), (N, W) -> (r10, r01), each (N,) int32. N % blk_n == 0."""
+    (W,) = q_words.shape
+    N, Wd = cand_words.shape
+    assert W == Wd
+    assert N % blk_n == 0, (N, blk_n)
+    grid = (N // blk_n,)
+    return pl.pallas_call(
+        functools.partial(_verify_kernel, n_words=W),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, W), lambda i: (0, 0)),
+            pl.BlockSpec((blk_n, W), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+            pl.BlockSpec((blk_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_words.astype(jnp.uint32)[None, :], cand_words.astype(jnp.uint32))

@@ -1,0 +1,5 @@
+"""Launch surface: mesh construction, sharding assembly, dry-run, drivers."""
+
+from .mesh import make_mesh, make_production_mesh
+
+__all__ = ["make_mesh", "make_production_mesh"]

@@ -1,0 +1,106 @@
+"""Sharding assembly: logical-axes trees -> NamedSharding trees.
+
+Covers parameters, optimizer state (ZeRO-style: quantized moments are flat
+and shard over every mesh axis), decode caches, and batch inputs. All
+resolution goes through ``models.sharding.resolve_spec`` so non-dividing
+axes degrade to replication with a logged decision instead of failing.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models import lm
+from ..models.api import INPUT_LOGICAL_AXES
+from ..models.common import ArchConfig
+from ..models.sharding import DEFAULT_RULES, Rules, resolve_spec
+from ..optim import OptimConfig, state_specs
+
+# flat (ZeRO) sharding for quantized optimizer moments
+FLAT_AXES = ("pod", "data", "model")
+
+
+def _named(mesh, rules, sds, axes, log, what):
+    spec = resolve_spec(mesh, rules, sds.shape, axes, log, what)
+    return NamedSharding(mesh, spec)
+
+
+def param_shardings(cfg: ArchConfig, mesh: Mesh, rules: Rules, log=None):
+    specs = lm.param_specs(cfg)
+    axes = lm.logical_axes(cfg)
+    return jax.tree.map(
+        lambda s, a: _named(mesh, rules, s, a, log, "param"),
+        specs,
+        axes,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def opt_shardings(
+    ocfg: OptimConfig, cfg: ArchConfig, mesh: Mesh, rules: Rules, log=None
+):
+    """Moments: param-sharded when f32; flat all-axes (ZeRO) when int8."""
+    pspecs = lm.param_specs(cfg)
+    paxes = lm.logical_axes(cfg)
+    ospecs = state_specs(ocfg, pspecs)
+
+    # walk param specs / axes / moment specs in lockstep
+    flat_p, tdef = jax.tree.flatten(
+        pspecs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+    )
+    flat_a = tdef.flatten_up_to(paxes)
+    flat_m = tdef.flatten_up_to(ospecs["moments"])
+    out_m = []
+    for ps, ax, m in zip(flat_p, flat_a, flat_m):
+        if ocfg.quantized_moments:
+            rules_flat = dict(rules)
+            rules_flat["flat"] = FLAT_AXES
+
+            def flat_sh(sds):
+                return _named(mesh, rules_flat, sds, ("flat",), log, "opt")
+
+            out_m.append(
+                jax.tree.map(
+                    flat_sh, m,
+                    is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+                )
+            )
+        else:
+            sh = _named(mesh, rules, ps, ax, log, "opt")
+            out_m.append({"mu": sh, "nu": sh})
+    return {
+        "step": NamedSharding(mesh, P()),
+        "moments": jax.tree.unflatten(tdef, out_m),
+    }
+
+
+def cache_shardings(cfg: ArchConfig, mesh: Mesh, rules: Rules, cache_tpl, log=None):
+    """Decode-cache shardings by positional convention (see lm.CACHE_AXES)."""
+
+    def leaf_axes(sds):
+        nd = len(sds.shape)
+        if nd == 5 and sds.shape[-1] in (cfg.ssm_state,) and cfg.has_ssm:
+            return ("layers", "batch", "ssm_heads", "head_dim", "ssm_state")
+        if nd == 5:   # attn kv: (L, B, S, Hkv, Dh)
+            return ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+        if nd == 4:   # ssm conv: (L, B, K, conv_dim)
+            return ("layers", "batch", "conv_width", "ssm_inner")
+        return (None,) * nd
+
+    return jax.tree.map(
+        lambda s: _named(mesh, rules, s, leaf_axes(s), log, "cache"),
+        cache_tpl,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def batch_shardings(cfg: ArchConfig, mesh: Mesh, rules: Rules, batch_specs, log=None):
+    out = {}
+    for name, sds in batch_specs.items():
+        axes = INPUT_LOGICAL_AXES[name][: len(sds.shape)]
+        out[name] = _named(mesh, rules, sds, axes, log, f"in:{name}")
+    return out

@@ -1,0 +1,13 @@
+"""Model zoo: unified transformer/SSM stack for the 10 assigned archs."""
+
+from .api import Model, input_specs
+from .common import SHAPES, ArchConfig, ShapeConfig, shape_applicable
+
+__all__ = [
+    "ArchConfig",
+    "Model",
+    "SHAPES",
+    "ShapeConfig",
+    "input_specs",
+    "shape_applicable",
+]

@@ -1,0 +1,108 @@
+"""Family-dispatching model API: one call surface for all architectures.
+
+    model = Model(cfg)
+    params = model.init_params(key)
+    loss, metrics = model.loss(params, batch)
+    logits, cache = model.prefill(params, batch)
+    logits, cache = model.decode_step(params, cache, tokens, pos)
+
+``input_specs(cfg, shape)`` builds the allocation-free ShapeDtypeStruct
+inputs for every (arch x shape) dry-run cell, including the stubbed
+modality frontends (vlm patch embeddings, whisper mel frames).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from . import encdec, lm
+from .common import ArchConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+
+    # ------------------------------------------------------------ params
+    def init_params(self, key):
+        return lm.init_params(self.cfg, key)
+
+    def param_specs(self):
+        return lm.param_specs(self.cfg)
+
+    def logical_axes(self):
+        return lm.logical_axes(self.cfg)
+
+    # ------------------------------------------------------------- train
+    def loss(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.loss_fn(self.cfg, params, batch)
+        return lm.loss_fn(self.cfg, params, batch)
+
+    def forward(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.forward(self.cfg, params, batch)
+        return lm.forward(self.cfg, params, batch)
+
+    # ------------------------------------------------------------- serve
+    def prefill(self, params, batch):
+        if self.cfg.family == "encdec":
+            return encdec.prefill(self.cfg, params, batch)
+        return lm.prefill(self.cfg, params, batch)
+
+    def decode_step(self, params, cache, tokens, pos):
+        if self.cfg.family == "encdec":
+            return encdec.decode_step(self.cfg, params, cache, tokens, pos)
+        return lm.decode_step(self.cfg, params, cache, tokens, pos)
+
+    def cache_template(self, batch: int, max_seq: int):
+        if self.cfg.family == "encdec":
+            return encdec.cache_template(self.cfg, batch, max_seq)
+        return lm.cache_template(self.cfg, batch, max_seq)
+
+    def init_cache(self, batch: int, max_seq: int):
+        if self.cfg.family == "encdec":
+            return encdec.init_cache(self.cfg, batch, max_seq)
+        return lm.init_cache(self.cfg, batch, max_seq)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """ShapeDtypeStruct inputs for one dry-run cell (no allocation).
+
+    train:   full-sequence batch for train_step
+    prefill: full-sequence batch for prefill
+    decode:  one-token batch + positions for serve_step (cache comes from
+             Model.cache_template at seq_len)
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "vlm":
+            n_vis = cfg.vision_tokens
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S - n_vis), i32),
+                "vision_embeds": jax.ShapeDtypeStruct(
+                    (B, n_vis, cfg.d_model), cfg.cdtype()
+                ),
+            }
+        if cfg.family == "encdec":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "enc_frames": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq, cfg.d_model), cfg.cdtype()
+                ),
+            }
+        return {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+    # decode: one new token against a seq_len-sized cache
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+INPUT_LOGICAL_AXES = {
+    "tokens": ("batch", "seq"),
+    "vision_embeds": ("batch", "vision_seq", "embed"),
+    "enc_frames": ("batch", "enc_seq", "embed"),
+}

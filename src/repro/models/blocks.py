@@ -1,0 +1,229 @@
+"""Transformer block assembly for every architecture family.
+
+One ``block_forward`` handles the full-sequence path (train / prefill) and
+``block_decode`` the single-token path, switching on the family:
+
+  dense   x += attn(norm(x));  x += mlp(norm(x))
+  moe     x += attn(norm(x));  x += moe(norm(x)) [+ dense-residual mlp]
+  ssm     x += ssd(norm(x))                         (no MLP when d_ff == 0)
+  hybrid  x += g_a*attn(norm(x)) + g_m*ssd(norm(x)); x += mlp(norm(x))
+
+Caches are NamedTuples so layer-stacked pytrees scan cleanly.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (
+    apply_norm,
+    apply_rope,
+    blocked_attention,
+    decode_attention,
+    mlp,
+    rope_angles,
+)
+from .sharding import shard_hint
+
+
+class AttnCache(NamedTuple):
+    k: jax.Array    # (B, S_max, Hkv, Dh)
+    v: jax.Array
+
+
+class LayerCache(NamedTuple):
+    attn: Optional[AttnCache]
+    ssm: Optional[ssm_lib.SSMState]
+
+
+# ------------------------------------------------------------- attention
+def _attn_proj(x, p, cfg):
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cdt))
+    return q, k, v
+
+
+def attention_full(
+    x, p, cfg, positions, *, causal=True, window=0, kv_override=None
+):
+    """Full-sequence attention; returns (out, (k, v)) for cache building.
+
+    ``p`` is the attention subdict {wq, wk, wv, wo}."""
+    q, k, v = _attn_proj(x, p, cfg)
+    if kv_override is not None:          # cross-attention: kv from encoder
+        k, v = kv_override
+        kv_pos = jnp.arange(k.shape[1])
+    else:
+        kv_pos = positions
+    if cfg.rope_theta > 0 and kv_override is None:
+        cos_q, sin_q = rope_angles(positions, cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q, cos_q, sin_q)
+        k = apply_rope(k, cos_q, sin_q)
+    q = shard_hint(q, "batch", "seq", "q_heads", "head_dim")
+    k = shard_hint(k, "batch", "seq", "kv_heads", "head_dim")
+    out = blocked_attention(
+        q, k, v,
+        causal=causal,
+        window=window,
+        q_chunk=cfg.q_chunk,
+        kv_chunk=cfg.kv_chunk,
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, (k, v)
+
+
+def attention_decode(x, p, cfg, cache: AttnCache, pos, *, window=0):
+    """Single-token attention with cache update at position ``pos``.
+
+    If the cache is a ring buffer (its length equals the sliding window,
+    shorter than the sequence), writes go to slot ``pos % len`` and keys
+    carry RoPE at their absolute positions, so relative phases stay exact.
+    """
+    q, k, v = _attn_proj(x, p, cfg)      # (B,1,H,Dh)
+    if cfg.rope_theta > 0:
+        posv = jnp.full((1,), pos)
+        cos, sin = rope_angles(posv, cfg.head_dim_, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    s_cache = cache.k.shape[1]
+    ring = bool(window) and s_cache == min(s_cache, window)
+    slot = pos % s_cache if ring else pos
+    new_k = jax.lax.dynamic_update_slice_in_dim(
+        cache.k, k.astype(cache.k.dtype), slot, axis=1
+    )
+    new_v = jax.lax.dynamic_update_slice_in_dim(
+        cache.v, v.astype(cache.v.dtype), slot, axis=1
+    )
+    out = decode_attention(q, new_k, new_v, pos + 1, window=window, ring=ring)
+    out = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return out, AttnCache(k=new_k, v=new_v)
+
+
+def cross_attention_decode(x, p, cfg, cross_k, cross_v):
+    """Decoder-side cross-attention against precomputed encoder KV."""
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cdt))
+    out = decode_attention(q, cross_k, cross_v, cross_k.shape[1])
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cdt))
+
+
+# ------------------------------------------------------------ ffn variants
+def _ffn(x, p, cfg):
+    """Dense MLP / MoE / MoE+dense-residual, on (B, S, D)."""
+    if not cfg.is_moe:
+        with jax.named_scope("mlp"):
+            return mlp(x, p["mlp"], cfg.activation), {}
+    B, S, D = x.shape
+    with jax.named_scope("moe"):
+        out, aux = moe_lib.moe_block(
+            x.reshape(B * S, D),
+            p["moe"],
+            top_k=cfg.experts_per_token,
+            capacity_factor=cfg.capacity_factor,
+            activation=cfg.activation,
+        )
+    out = out.reshape(B, S, D)
+    if cfg.moe_dense_residual_ff:
+        out = out + mlp(x, p["moe_dense"], cfg.activation)
+    return out, aux
+
+
+def _ffn_params_subset(p):
+    return p  # moe/mlp weights live flat in the layer dict
+
+
+# --------------------------------------------------------------- full pass
+def block_forward(
+    cfg, p, x, positions, *, window=0, build_cache=False, moe_layer=True,
+    causal=True,
+):
+    """One layer, full-sequence. Returns (x, aux, cache_or_None)."""
+    aux = {}
+    cache = None
+    h = apply_norm(x, p["ln1"], cfg.norm)
+    h = shard_hint(h, "batch", "seq", "embed")
+
+    if cfg.family == "ssm":
+        if build_cache:
+            out, ssm_state = ssm_lib.ssm_forward(h, p["ssm"], cfg, return_state=True)
+            cache = LayerCache(attn=None, ssm=ssm_state)
+        else:
+            out = ssm_lib.ssm_forward(h, p["ssm"], cfg)
+        x = x + out
+        return x, aux, cache
+
+    if cfg.family == "hybrid":
+        attn_out, kv = attention_full(
+            h, p["attn"], cfg, positions, causal=causal, window=window
+        )
+        if build_cache:
+            ssm_out, ssm_state = ssm_lib.ssm_forward(
+                h, p["ssm"], cfg, return_state=True
+            )
+        else:
+            ssm_out = ssm_lib.ssm_forward(h, p["ssm"], cfg)
+            ssm_state = None
+        x = x + p["fuse_attn"].astype(x.dtype) * attn_out \
+              + p["fuse_ssm"].astype(x.dtype) * ssm_out
+        if build_cache:
+            cache = LayerCache(
+                attn=AttnCache(k=kv[0], v=kv[1]), ssm=ssm_state
+            )
+    else:
+        attn_out, kv = attention_full(
+            h, p["attn"], cfg, positions, causal=causal, window=window
+        )
+        x = x + attn_out
+        if build_cache:
+            cache = LayerCache(attn=AttnCache(k=kv[0], v=kv[1]), ssm=None)
+
+    if cfg.d_ff > 0 or cfg.is_moe:
+        h2 = apply_norm(x, p["ln2"], cfg.norm)
+        h2 = shard_hint(h2, "batch", "seq", "embed")
+        ffn_out, aux = (
+            _ffn(h2, p, cfg)
+            if moe_layer
+            else (mlp(h2, p["mlp"], cfg.activation), {})
+        )
+        x = x + ffn_out
+    x = shard_hint(x, "batch", "seq", "embed")
+    return x, aux, cache
+
+
+# -------------------------------------------------------------- decode pass
+def block_decode(cfg, p, x, cache: LayerCache, pos, *, window=0):
+    """One layer, one token. Returns (x, new_cache)."""
+    h = apply_norm(x, p["ln1"], cfg.norm)
+
+    if cfg.family == "ssm":
+        out, new_ssm = ssm_lib.ssm_decode_step(h, cache.ssm, p["ssm"], cfg)
+        x = x + out
+        return x, LayerCache(attn=None, ssm=new_ssm)
+
+    if cfg.family == "hybrid":
+        attn_out, new_attn = attention_decode(
+            h, p["attn"], cfg, cache.attn, pos, window=window
+        )
+        ssm_out, new_ssm = ssm_lib.ssm_decode_step(h, cache.ssm, p["ssm"], cfg)
+        x = x + p["fuse_attn"].astype(x.dtype) * attn_out \
+              + p["fuse_ssm"].astype(x.dtype) * ssm_out
+        new_cache = LayerCache(attn=new_attn, ssm=new_ssm)
+    else:
+        attn_out, new_attn = attention_decode(
+            h, p["attn"], cfg, cache.attn, pos, window=window
+        )
+        x = x + attn_out
+        new_cache = LayerCache(attn=new_attn, ssm=None)
+
+    if cfg.d_ff > 0 or cfg.is_moe:
+        h2 = apply_norm(x, p["ln2"], cfg.norm)
+        ffn_out, _ = _ffn(h2, p, cfg)
+        x = x + ffn_out
+    return x, new_cache

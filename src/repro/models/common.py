@@ -1,0 +1,166 @@
+"""Architecture config schema + logical-axis sharding vocabulary.
+
+Every assigned architecture is described by one frozen ``ArchConfig``. Shapes
+of all parameters/caches derive from it, so the dry-run can build
+ShapeDtypeStructs without allocating anything.
+
+Logical axes (MaxText-style): every parameter/activation dim is tagged with a
+logical name; ``repro.launch.sharding`` maps logical names -> mesh axes via a
+rules table (the hillclimbing lever), dropping mesh axes that do not divide
+the dim (decision logged, never fatal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+# ------------------------------------------------------------------ config
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // n_heads
+    activation: str = "swiglu"  # swiglu | geglu | gelu
+    norm: str = "rmsnorm"       # rmsnorm | layernorm
+    rope_theta: float = 500_000.0
+    tie_embeddings: bool = False
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    moe_dense_residual_ff: int = 0   # arctic: parallel dense MLP width
+    first_k_dense: int = 0           # kimi: leading dense layers
+    capacity_factor: float = 1.25
+    # --- SSM (mamba2 / hybrid) ---
+    ssm_state: int = 0
+    ssm_heads: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_width: int = 4
+    # --- enc-dec (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 0             # stubbed frontend frames (whisper: 1500)
+    # --- vlm (llava) ---
+    vision_tokens: int = 0           # stubbed patch embeds per sequence
+    # --- attention windowing (hybrid long-context) ---
+    sliding_window: int = 0          # 0 = full causal
+    # --- numerics / execution ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    scan_layers: bool = True
+    remat: str = "full"              # full | dots | none
+    # attention blocking (pure-JAX flash-style); hillclimb levers
+    q_chunk: int = 1024
+    kv_chunk: int = 1024
+    # blocked cross-entropy: tokens per chunk (0 = unchunked legacy path).
+    # Bounds the live (tokens, vocab) logits tensor to (ce_chunk, vocab),
+    # rematerializing it in backward — §Perf iteration K4 (big-vocab archs).
+    ce_chunk: int = 0
+    # structural head padding for tensor parallelism (§Perf iteration L3):
+    # round n_heads up to this multiple so the q-head dim divides the
+    # model axis (llava/arctic: 56 -> 64 on a 16-way axis). Extra heads are
+    # extra capacity, not a semantic change; 0 = exact published count.
+    pad_heads_to_multiple: int = 0
+
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_heads_padded(self) -> int:
+        """Attention-projection head count after TP padding (L3)."""
+        m = self.pad_heads_to_multiple
+        if not m:
+            return self.n_heads
+        h = ((self.n_heads + m - 1) // m) * m
+        # GQA requires an integer group size
+        while h % self.n_kv_heads:
+            h += 1
+        return h
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        if self.ssm_heads:
+            return self.ssm_heads * self.ssm_head_dim
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads_(self) -> int:
+        return self.ssm_heads or self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def has_attention(self) -> bool:
+        return self.family != "ssm"
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ------------------------------------------------------- param counts
+    def param_count(self) -> int:
+        """Total parameters N (embedding included)."""
+        from . import lm  # deferred; avoids import cycle
+
+        return lm.count_params(self)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only routed experts count)."""
+        from . import lm
+
+        return lm.count_params(self, active_only=True)
+
+
+# ----------------------------------------------------- shapes (assignment)
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+# long_500k needs sub-quadratic attention: only SSM/hybrid run it
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return False, (
+            "long_500k requires sub-quadratic attention; "
+            f"{cfg.name} is pure full-attention (skip recorded in DESIGN.md)"
+        )
+    return True, ""

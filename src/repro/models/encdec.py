@@ -1,0 +1,204 @@
+"""Whisper-style encoder-decoder (audio family, conv frontend stubbed).
+
+The conv frontend is a STUB per the assignment: ``input_specs`` provides
+precomputed mel-frame embeddings (B, encoder_seq, d_model). Positions are
+sinusoidal (whisper uses sinusoidal for the encoder and learned for the
+decoder; we use sinusoidal for both — recorded in DESIGN.md). Decoder layers
+are self-attn (causal) -> cross-attn (encoder KV) -> MLP, all pre-norm.
+
+Decode caches: per-layer self-attn KV ring... linear buffers + per-layer
+cross-attn KV computed once at prefill from the encoder output.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import AttnCache, attention_full, attention_decode
+from .layers import apply_norm, decode_attention, mlp, sinusoidal_positions
+from .sharding import shard_hint
+
+
+class EncDecCache(NamedTuple):
+    self_kv: AttnCache     # (L, B, S_max, Hkv, Dh)
+    cross_kv: AttnCache    # (L, B, S_enc, Hkv, Dh)
+
+
+# ------------------------------------------------------------- encoder
+def encode(cfg, params, enc_frames):
+    """(B, S_enc, D) stub frames -> encoder hidden states."""
+    cdt = cfg.cdtype()
+    h = enc_frames.astype(cdt)
+    h = h + sinusoidal_positions(h.shape[1], cfg.d_model).astype(cdt)[None]
+    h = shard_hint(h, "batch", "enc_seq", "embed")
+    positions = jnp.arange(h.shape[1])
+
+    def body(x, lp):
+        hh = apply_norm(x, lp["ln1"], cfg.norm)
+        attn_out, _ = attention_full(hh, lp["attn"], cfg, positions, causal=False)
+        x = x + attn_out
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        x = x + mlp(h2, lp["mlp"], cfg.activation)
+        return x, None
+
+    h, _ = jax.lax.scan(body, h, params["enc_layers"])
+    return apply_norm(h, params["enc_norm"], cfg.norm)
+
+
+# ------------------------------------------------- decoder (full sequence)
+def _cross_attention_full(x, xp, cfg, enc_h):
+    cdt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, xp["wq"].astype(cdt))
+    k = jnp.einsum("bsd,dhk->bshk", enc_h, xp["wk"].astype(cdt))
+    v = jnp.einsum("bsd,dhk->bshk", enc_h, xp["wv"].astype(cdt))
+    from .layers import blocked_attention
+
+    out = blocked_attention(
+        q, k, v, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, xp["wo"].astype(cdt)), (k, v)
+
+
+def _decoder_layer_full(cfg, lp, x, positions, enc_h, build_cache):
+    h = apply_norm(x, lp["ln1"], cfg.norm)
+    attn_out, kv = attention_full(h, lp["attn"], cfg, positions, causal=True)
+    x = x + attn_out
+    hx = apply_norm(x, lp["lnx"], cfg.norm)
+    cross_out, cross_kv = _cross_attention_full(hx, lp["xattn"], cfg, enc_h)
+    x = x + cross_out
+    h2 = apply_norm(x, lp["ln2"], cfg.norm)
+    x = x + mlp(h2, lp["mlp"], cfg.activation)
+    cache = None
+    if build_cache:
+        cache = EncDecCache(
+            self_kv=AttnCache(k=kv[0], v=kv[1]),
+            cross_kv=AttnCache(k=cross_kv[0], v=cross_kv[1]),
+        )
+    return x, cache
+
+
+def _decode_tokens_embed(cfg, params, tokens, pos0):
+    cdt = cfg.cdtype()
+    h = params["embed"][tokens].astype(cdt)
+    S = tokens.shape[1]
+    pos = pos0 + jnp.arange(S)
+    half = cfg.d_model // 2
+    freq = jnp.exp(
+        -jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half
+    )
+    ang = pos.astype(jnp.float32)[:, None] * freq[None, :]
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return h + pe.astype(cdt)[None]
+
+
+def forward(cfg, params, batch) -> Tuple[jax.Array, Dict]:
+    """Training forward: returns (decoder logits (B, S, V) f32, aux)."""
+    enc_h = encode(cfg, params, batch["enc_frames"])
+    tokens = batch["tokens"]
+    h = _decode_tokens_embed(cfg, params, tokens, 0)
+    h = shard_hint(h, "batch", "seq", "embed")
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        x, _ = _decoder_layer_full(cfg, lp, x, positions, enc_h, False)
+        return x, None
+
+    import functools
+
+    from .lm import _remat_policy
+
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(
+            body, policy=_remat_policy(cfg), prevent_cse=True
+        )
+    h, _ = jax.lax.scan(body_fn, h, params["layers"])
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    w = params["unembed"].astype(h.dtype)
+    logits = (h @ w).astype(jnp.float32)
+    return logits, {}
+
+
+def loss_fn(cfg, params, batch):
+    logits, _ = forward(cfg, params, batch)
+    targets = batch["tokens"][:, 1:]
+    lg = logits[:, :-1]
+    logz = jax.scipy.special.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, targets[..., None], axis=-1)[..., 0]
+    mask = (targets >= 0).astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = ((logz - ll) * mask).sum() / denom
+    return ce, {"ce": ce, "loss": ce}
+
+
+# ----------------------------------------------------------------- decode
+def cache_template(cfg, batch: int, max_seq: int):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim_
+    cdt = cfg.cdtype()
+    L = cfg.n_layers
+    return EncDecCache(
+        self_kv=AttnCache(
+            k=jax.ShapeDtypeStruct((L, batch, max_seq, hkv, dh), cdt),
+            v=jax.ShapeDtypeStruct((L, batch, max_seq, hkv, dh), cdt),
+        ),
+        cross_kv=AttnCache(
+            k=jax.ShapeDtypeStruct((L, batch, cfg.encoder_seq, hkv, dh), cdt),
+            v=jax.ShapeDtypeStruct((L, batch, cfg.encoder_seq, hkv, dh), cdt),
+        ),
+    )
+
+
+def init_cache(cfg, batch: int, max_seq: int):
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_template(cfg, batch, max_seq)
+    )
+
+
+def decode_step(cfg, params, cache: EncDecCache, tokens, pos):
+    """One decoder token. tokens (B, 1); returns (logits (B, V), cache)."""
+    h = _decode_tokens_embed(cfg, params, tokens, pos)
+
+    def body(x, inp):
+        lp, self_kv, cross_kv = inp
+        hh = apply_norm(x, lp["ln1"], cfg.norm)
+        attn_out, new_kv = attention_decode(hh, lp["attn"], cfg, self_kv, pos)
+        x = x + attn_out
+        hx = apply_norm(x, lp["lnx"], cfg.norm)
+        cdt = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", hx, lp["xattn"]["wq"].astype(cdt))
+        cross_out = decode_attention(
+            q, cross_kv.k, cross_kv.v, cross_kv.k.shape[1]
+        )
+        x = x + jnp.einsum(
+            "bshk,hkd->bsd", cross_out, lp["xattn"]["wo"].astype(cdt)
+        )
+        h2 = apply_norm(x, lp["ln2"], cfg.norm)
+        x = x + mlp(h2, lp["mlp"], cfg.activation)
+        return x, new_kv
+
+    h, new_self = jax.lax.scan(
+        body, h, (params["layers"], cache.self_kv, cache.cross_kv)
+    )
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = (h @ params["unembed"].astype(h.dtype))[:, 0].astype(jnp.float32)
+    return logits, EncDecCache(self_kv=new_self, cross_kv=cache.cross_kv)
+
+
+def prefill(cfg, params, batch):
+    """Encoder pass + decoder prompt pass; builds both cache halves."""
+    enc_h = encode(cfg, params, batch["enc_frames"])
+    tokens = batch["tokens"]
+    h = _decode_tokens_embed(cfg, params, tokens, 0)
+    positions = jnp.arange(tokens.shape[1])
+
+    def body(x, lp):
+        x, cache = _decoder_layer_full(cfg, lp, x, positions, enc_h, True)
+        return x, cache
+
+    h, caches = jax.lax.scan(body, h, params["layers"])
+    h = apply_norm(h, params["final_norm"], cfg.norm)
+    logits = (h[:, -1] @ params["unembed"].astype(h.dtype)).astype(jnp.float32)
+    return logits, caches

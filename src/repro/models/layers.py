@@ -1,0 +1,310 @@
+"""Core layers: norms, RoPE, blocked (flash-style) attention, MLPs.
+
+All attention here is pure-JAX blockwise online-softmax: memory is
+O(q_chunk * kv_chunk) per (batch, head) instead of O(S^2), which is what
+lets prefill_32k lower without materializing a 32k x 32k score matrix.
+Sharding is induced from the operands (heads sharded on `model`, batch on
+`data`/`pod`); XLA/GSPMD propagates through the scans.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ------------------------------------------------------------------ norms
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(
+    x: jax.Array, scale: jax.Array, bias: jax.Array, eps: float = 1e-5
+) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(x, params, kind: str):
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["scale"])
+    return layernorm(x, params["scale"], params["bias"])
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_angles(positions: jax.Array, head_dim: int, theta: float):
+    """positions (...,) -> cos/sin (..., head_dim/2), float32."""
+    half = head_dim // 2
+    freqs = 1.0 / (
+        theta ** (jnp.arange(0, half, dtype=jnp.float32) / half)
+    )
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    out = jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+    return out.astype(dt)
+
+
+# ------------------------------------------------- sinusoidal (whisper enc)
+def sinusoidal_positions(seq: int, d_model: int) -> jax.Array:
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    half = d_model // 2
+    freq = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ------------------------------------------------------------------- MLPs
+def mlp(x: jax.Array, params, activation: str) -> jax.Array:
+    """Gated/ungated feed-forward. Weights: wi[, wi_gate], wo."""
+    cdt = x.dtype
+    if activation in ("swiglu", "geglu"):
+        act = jax.nn.silu if activation == "swiglu" else (
+            lambda v: jax.nn.gelu(v, approximate=True)
+        )
+        h = act(x @ params["wi_gate"].astype(cdt)) * (
+            x @ params["wi"].astype(cdt)
+        )
+    else:  # gelu
+        h = jax.nn.gelu(x @ params["wi"].astype(cdt), approximate=True)
+    return h @ params["wo"].astype(cdt)
+
+
+# ------------------------------------------------------- blocked attention
+def _chunk_mask(
+    q_pos: jax.Array, k_pos: jax.Array, causal: bool, window: int
+) -> jax.Array:
+    """(Sq, Sk) additive mask in float32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        ok &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        ok &= q_pos[:, None] - k_pos[None, :] < window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def blocked_attention(
+    q: jax.Array,            # (B, Sq, Hq, D)
+    k: jax.Array,            # (B, Sk, Hkv, D)
+    v: jax.Array,            # (B, Sk, Hkv, D)
+    *,
+    causal: bool,
+    q_offset: int | jax.Array = 0,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Flash-style online-softmax attention in pure JAX.
+
+    Returns (B, Sq, Hq, D). GQA is handled by reshaping Hq = Hkv * G.
+    ``q_offset`` shifts query positions (prefill continuation / decode).
+
+    The whole computation runs under ``named_scope("flash_attn")`` so the
+    roofline HLO parser can attribute its HBM traffic (and model the fused
+    Pallas kernel replacing it on TPU — see kernels/flash_attention.py).
+
+    On TPU (``use_kernel=None`` -> auto) the forward runs the fused Pallas
+    kernel; backward recomputes through this pure-JAX path (custom_vjp).
+    Elsewhere the pure-JAX path runs both ways — it is also the kernel's
+    correctness oracle.
+    """
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    with jax.named_scope("flash_attn"):
+        if use_kernel and q_offset == 0:
+            return _flash_fwd_oracle_bwd(
+                q, k, v, causal, window, q_chunk, kv_chunk
+            )
+        return _blocked_attention_impl(
+            q, k, v, causal=causal, q_offset=q_offset, window=window,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        )
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash_fwd_oracle_bwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    from ..kernels.flash_attention import flash_attention
+
+    return flash_attention(
+        q, k, v, causal=causal, window=window,
+        interpret=jax.default_backend() != "tpu",
+    )
+
+
+def _ffob_fwd(q, k, v, causal, window, q_chunk, kv_chunk):
+    return (
+        _flash_fwd_oracle_bwd(q, k, v, causal, window, q_chunk, kv_chunk),
+        (q, k, v),
+    )
+
+
+def _ffob_bwd(causal, window, q_chunk, kv_chunk, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: _blocked_attention_impl(
+            q_, k_, v_, causal=causal, window=window,
+            q_chunk=q_chunk, kv_chunk=kv_chunk,
+        ),
+        q, k, v,
+    )
+    return vjp(g)
+
+
+_flash_fwd_oracle_bwd.defvjp(_ffob_fwd, _ffob_bwd)
+
+
+def _blocked_attention_impl(
+    q, k, v, *, causal, q_offset=0, window=0, q_chunk=1024, kv_chunk=1024
+):
+    B, Sq, Hq, D = q.shape
+    _, Sk, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = D ** -0.5
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    Sq_p, Sk_p = nq * q_chunk, nk * kv_chunk
+
+    qf = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    kf = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    vf = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+
+    # (B, nq, qc, Hkv, G, D)
+    qf = qf.reshape(B, nq, q_chunk, Hkv, G, D)
+    kf = kf.reshape(B, nk, kv_chunk, Hkv, D)
+    vf = vf.reshape(B, nk, kv_chunk, Hkv, D)
+
+    q_pos_all = jnp.arange(Sq_p) + q_offset
+    k_pos_all = jnp.arange(Sk_p)
+    k_valid_all = k_pos_all < Sk
+
+    def per_q_chunk(qi, q_blk):
+        q_pos = jax.lax.dynamic_slice_in_dim(q_pos_all, qi * q_chunk, q_chunk)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            k_blk, v_blk, ki = inp
+            k_pos = jax.lax.dynamic_slice_in_dim(k_pos_all, ki * kv_chunk, kv_chunk)
+            k_val = jax.lax.dynamic_slice_in_dim(k_valid_all, ki * kv_chunk, kv_chunk)
+            # scores: (B, qc, Hkv, G, kc)
+            s = jnp.einsum(
+                "bqhgd,bkhd->bqhgk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            mask = _chunk_mask(q_pos, k_pos, causal, window)
+            mask = jnp.where(k_val[None, :], mask, NEG_INF)
+            s = s + mask[None, :, None, None, :]
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(v_blk.dtype), v_blk,
+                preferred_element_type=jnp.float32,
+            )
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, q_chunk, Hkv, G), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, Hkv, G), dtype=jnp.float32)
+        a0 = jnp.zeros((B, q_chunk, Hkv, G, D), dtype=jnp.float32)
+        ks = (kf, vf, jnp.arange(nk))
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (jnp.moveaxis(kf, 1, 0), jnp.moveaxis(vf, 1, 0), jnp.arange(nk))
+        )
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, qc, Hkv, G, D)
+
+    outs = jax.lax.map(
+        lambda i: per_q_chunk(i, jax.lax.dynamic_index_in_dim(jnp.moveaxis(qf, 1, 0), i, 0, keepdims=False)),
+        jnp.arange(nq),
+    )  # (nq, B, qc, Hkv, G, D)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, Sq_p, Hq, D)[:, :Sq]
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,             # (B, 1, Hq, D)
+    k_cache: jax.Array,       # (B, S, Hkv, D)
+    v_cache: jax.Array,       # (B, S, Hkv, D)
+    cache_len: jax.Array,     # scalar int32: #tokens written so far
+    *,
+    window: int = 0,
+    ring: bool = False,
+    use_kernel: bool | None = None,
+) -> jax.Array:
+    """Single-token attention over a linear or ring-buffer KV cache.
+
+    Linear cache: slots [0, cache_len) are valid; optional sliding-window
+    mask keeps the last ``window`` positions. Ring cache (slot = pos % S):
+    slots [0, min(cache_len, S)) are valid and are by construction exactly
+    the last <= S == window positions, so no extra mask is needed.
+
+    Runs under ``named_scope("decode_attn")`` for roofline attribution.
+    On TPU the linear-cache path uses the fused flash-decode kernel
+    (kernels/flash_attention.py, ``valid_len``): one pass over the cache,
+    scores never leave VMEM.
+    """
+    with jax.named_scope("decode_attn"):
+        if use_kernel is None:
+            use_kernel = jax.default_backend() == "tpu"
+        if use_kernel and not ring:
+            from ..kernels.flash_attention import flash_attention
+
+            return flash_attention(
+                q, k_cache, v_cache,
+                causal=False,
+                window=window,
+                valid_len=cache_len,
+                interpret=jax.default_backend() != "tpu",
+            )
+        return _decode_attention_impl(
+            q, k_cache, v_cache, cache_len, window=window, ring=ring
+        )
+
+
+def _decode_attention_impl(
+    q, k_cache, v_cache, cache_len, *, window=0, ring=False
+):
+    B, S, Hkv, D = k_cache.shape
+    Hq = q.shape[2]
+    G = Hq // Hkv
+    qh = q.reshape(B, Hkv, G, D)
+    s = jnp.einsum(
+        "bhgd,bkhd->bhgk", qh, k_cache, preferred_element_type=jnp.float32
+    ) * (D ** -0.5)
+    k_pos = jnp.arange(S)
+    ok = k_pos < cache_len
+    if window > 0 and not ring:
+        ok &= k_pos >= cache_len - window
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)

@@ -1,0 +1,129 @@
+"""Logical-axis sharding: rules table + activation hint mechanism.
+
+Parameters and key activations are tagged with *logical* axis names. A rules
+table maps logical names to mesh axes. ``resolve_spec`` drops any mesh axis
+that does not evenly divide the corresponding dim — so every architecture in
+the pool lowers on every mesh without padding hacks; each drop is recorded
+for the dry-run report.
+
+Models call ``shard_hint(x, "batch", "seq", "embed")``; outside an active
+mesh context this is the identity, so smoke tests on one device never touch
+device state.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+# Default production rules: DP over pod+data, TP/EP over model.
+DEFAULT_RULES: Rules = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "experts": "model",
+    # dispatch buffer (E, C, D): E over model (EP), C over the data axes —
+    # without this the per-device buffer at kimi-k2 train scale is ~9 TB
+    "expert_capacity": ("pod", "data"),
+    "vocab": "model",
+    "layers": None,
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv_width": None,
+    "kv_seq": None,
+    "enc_seq": None,
+    "vision_seq": None,
+}
+
+
+class _Ctx(threading.local):
+    mesh: Optional[Mesh] = None
+    rules: Optional[Rules] = None
+    log: Optional[list] = None
+
+
+_CTX = _Ctx()
+
+
+@contextmanager
+def sharding_context(mesh: Mesh, rules: Optional[Rules] = None, log: Optional[list] = None):
+    """Activate a mesh + rules table for shard_hint / make_sharding."""
+    prev = (_CTX.mesh, _CTX.rules, _CTX.log)
+    _CTX.mesh, _CTX.rules, _CTX.log = mesh, dict(rules or DEFAULT_RULES), log
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules, _CTX.log = prev
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def resolve_spec(
+    mesh: Mesh,
+    rules: Rules,
+    dims: Sequence[int],
+    logical_axes: Sequence[Optional[str]],
+    log: Optional[list] = None,
+    what: str = "",
+) -> P:
+    """Logical axes -> PartitionSpec, dropping non-dividing mesh axes."""
+    assert len(dims) == len(logical_axes), (dims, logical_axes)
+    used: set = set()
+    out = []
+    for dim, name in zip(dims, logical_axes):
+        target = rules.get(name) if name is not None else None
+        if target is None:
+            out.append(None)
+            continue
+        axes = (target,) if isinstance(target, str) else tuple(target)
+        kept = []
+        size = 1
+        for ax in axes:
+            if ax not in mesh.axis_names or ax in used:
+                continue
+            ax_size = mesh.shape[ax]
+            if dim % (size * ax_size) == 0:
+                kept.append(ax)
+                size *= ax_size
+            elif log is not None:
+                log.append(
+                    f"drop {ax} from {what}:{name} (dim {dim} % {size * ax_size} != 0)"
+                )
+        used.update(kept)
+        if not kept:
+            out.append(None)
+        elif len(kept) == 1:
+            out.append(kept[0])
+        else:
+            out.append(tuple(kept))
+    return P(*out)
+
+
+def make_sharding(dims, logical_axes, what: str = "") -> Optional[NamedSharding]:
+    if _CTX.mesh is None:
+        return None
+    spec = resolve_spec(_CTX.mesh, _CTX.rules, dims, logical_axes, _CTX.log, what)
+    return NamedSharding(_CTX.mesh, spec)
+
+
+def shard_hint(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint driven by the active rules; identity if none."""
+    if _CTX.mesh is None:
+        return x
+    sh = make_sharding(x.shape, logical_axes, what="act")
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)

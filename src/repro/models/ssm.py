@@ -1,0 +1,265 @@
+"""Mamba2 / SSD (state-space duality) block — arXiv:2405.21060.
+
+Training path: chunked SSD. Within a chunk the recurrence is materialized
+as a decay-masked attention-like quadratic form (matmul-friendly, MXU
+work); across chunks a short sequential scan carries the (H, P, N) state.
+Chunk length trades VMEM/HBM working set (the (B, nc, H, Q, Q) decay mask
+is the largest intermediate) against scan length — a hillclimb lever.
+
+Decode path: O(1) recurrent state update per token — this is what makes
+long_500k feasible for the ssm/hybrid architectures.
+
+Group count G=1 (B/C shared across heads), matching the mamba2-1.3b config.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import rmsnorm
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array   # (B, conv_width-1, conv_dim)
+    ssm: jax.Array    # (B, H, P, N) float32
+
+
+def ssm_dims(cfg):
+    H = cfg.ssm_heads_
+    P = cfg.ssm_head_dim
+    N = cfg.ssm_state
+    d_inner = H * P
+    conv_dim = d_inner + 2 * N            # x, B, C are convolved
+    d_in_proj = 2 * d_inner + 2 * N + H   # z, xBC, dt
+    return H, P, N, d_inner, conv_dim, d_in_proj
+
+
+def _causal_depthwise_conv(x: jax.Array, w: jax.Array, b: jax.Array):
+    """x (B,S,C), w (K,C), b (C,): causal depthwise conv along S."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K is 4: static unroll
+        out = out + xp[:, i : i + x.shape[1], :] * w[i][None, None, :]
+    return out + b[None, None, :]
+
+
+def _segsum(alpha: jax.Array) -> jax.Array:
+    """alpha (..., Q) -> (..., Q, Q) with out[i,j] = sum_{j<t<=i} alpha_t,
+    -inf above the diagonal (exclusive-of-j, inclusive-of-i segment sums)."""
+    Q = alpha.shape[-1]
+    cs = jnp.cumsum(alpha, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssm_forward(
+    x: jax.Array, params, cfg, chunk: int = 128, return_state: bool = False
+):
+    """Full-sequence SSD: (B, S, D) -> (B, S, D) [, final SSMState].
+
+    ``return_state`` also returns the recurrent state after the last real
+    token, so decode can continue exactly where prefill stopped.
+    """
+    with jax.named_scope("ssd"):
+        return _ssm_forward_impl(x, params, cfg, chunk, return_state)
+
+
+def _ssm_forward_impl(x, params, cfg, chunk=128, return_state=False):
+    H, P, N, d_inner, conv_dim, _ = ssm_dims(cfg)
+    B, S, D = x.shape
+    cdt = x.dtype
+
+    proj = x @ params["in_proj"].astype(cdt)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner : d_inner + conv_dim]
+    dt_raw = proj[..., d_inner + conv_dim :]
+
+    xBC = jax.nn.silu(
+        _causal_depthwise_conv(
+            xBC, params["conv_w"].astype(cdt), params["conv_b"].astype(cdt)
+        )
+    )
+    xs = xBC[..., :d_inner]
+    B_ = xBC[..., d_inner : d_inner + N].astype(jnp.float32)
+    C_ = xBC[..., d_inner + N :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                # (B,S,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (H,)
+    alpha = dt * A[None, None, :]                     # (B,S,H) (<0)
+
+    # ---- chunking ----
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    Sp = nc * Q
+    pad = ((0, 0), (0, Sp - S))
+    xs_c = jnp.pad(xs, pad + ((0, 0),)).reshape(B, nc, Q, H, P)
+    B_c = jnp.pad(B_, pad + ((0, 0),)).reshape(B, nc, Q, N)
+    C_c = jnp.pad(C_, pad + ((0, 0),)).reshape(B, nc, Q, N)
+    dt_c = jnp.pad(dt, pad + ((0, 0),)).reshape(B, nc, Q, H)
+    al_c = jnp.pad(alpha, pad + ((0, 0),)).reshape(B, nc, Q, H)
+
+    xdt = (xs_c.astype(jnp.float32)) * dt_c[..., None]   # dt-discretized input
+
+    # intra-chunk (quadratic, decay-masked)
+    L = jnp.exp(_segsum(jnp.moveaxis(al_c, -1, 2)))       # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcin,bcjn->bcij", C_c, B_c)      # (B,nc,Q,Q)
+    y_diag = jnp.einsum(
+        "bcij,bchij,bcjhp->bcihp", scores, L, xdt,
+        preferred_element_type=jnp.float32,
+    )
+
+    # chunk states: decay from step j to end of chunk
+    cum = jnp.cumsum(al_c, axis=2)                        # (B,nc,Q,H)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    states = jnp.einsum(
+        "bcjn,bcjh,bcjhp->bchpn", B_c, decay_to_end, xdt,
+        preferred_element_type=jnp.float32,
+    )                                                     # (B,nc,H,P,N)
+
+    # inter-chunk recurrence (sequential over nc)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp                                     # (B,H,P,N), (B,H)
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                   # emit state *before* chunk
+
+    h0 = jnp.zeros((B, H, P, N), dtype=jnp.float32)
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0))
+    )
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                   # (B,nc,H,P,N)
+
+    y_off = jnp.einsum(
+        "bcin,bchpn,bcih->bcihp", C_c, h_prev, jnp.exp(cum),
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(B, Sp, H, P)[:, :S]
+    y = y + xs.reshape(B, S, H, P).astype(jnp.float32) * params["D_skip"].astype(
+        jnp.float32
+    )[None, None, :, None]
+    y = y.reshape(B, S, d_inner)
+
+    # gated RMSNorm + out projection (mamba2's NormGated)
+    y = y.astype(cdt) * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_scale"])
+    out = y @ params["out_proj"].astype(cdt)
+    if not return_state:
+        return out
+    # conv tail: last (K-1) pre-activation conv inputs, zero-padded on the
+    # left for sequences shorter than the window
+    K = cfg.conv_width
+    pre_conv = proj[..., d_inner : d_inner + conv_dim]
+    tail = jnp.pad(pre_conv, ((0, 0), (K - 1, 0), (0, 0)))[:, S : S + K - 1, :]
+    # NOTE: pad-region chunks contribute zero to states (xdt=0 there), but
+    # their decay still multiplies h; recompute the true last-token state:
+    # padded steps have xs=0 yet alpha<0, so h_last is h(S_p) = h(S) scaled
+    # by the pad decay. Undo it exactly:
+    pad_steps = Sp - S
+    if pad_steps:
+        pad_alpha = al_c.reshape(B, Sp, H)[:, S:, :].sum(axis=1)  # (B,H)
+        h_last = h_last / jnp.exp(pad_alpha)[:, :, None, None]
+    return out, SSMState(conv=tail.astype(cdt), ssm=h_last)
+
+
+def ssm_init_state(cfg, batch: int, dtype=jnp.float32) -> SSMState:
+    H, P, N, d_inner, conv_dim, _ = ssm_dims(cfg)
+    return SSMState(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype=dtype),
+        ssm=jnp.zeros((batch, H, P, N), dtype=jnp.float32),
+    )
+
+
+def ssm_decode_step(
+    x: jax.Array, state: SSMState, params, cfg
+) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent update: x (B, 1, D) -> (B, 1, D)."""
+    H, P, N, d_inner, conv_dim, _ = ssm_dims(cfg)
+    B = x.shape[0]
+    cdt = x.dtype
+    xt = x[:, 0, :]
+
+    proj = xt @ params["in_proj"].astype(cdt)
+    z = proj[..., :d_inner]
+    xBC = proj[..., d_inner : d_inner + conv_dim]
+    dt_raw = proj[..., d_inner + conv_dim :]
+
+    window = jnp.concatenate(
+        [state.conv.astype(cdt), xBC[:, None, :]], axis=1
+    )                                                  # (B, K, conv_dim)
+    conv_out = (
+        jnp.einsum("bkc,kc->bc", window, params["conv_w"].astype(cdt))
+        + params["conv_b"].astype(cdt)[None, :]
+    )
+    new_conv = window[:, 1:, :]
+    xBC = jax.nn.silu(conv_out)
+    xs = xBC[..., :d_inner].reshape(B, H, P).astype(jnp.float32)
+    B_ = xBC[..., d_inner : d_inner + N].astype(jnp.float32)
+    C_ = xBC[..., d_inner + N :].astype(jnp.float32)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32)
+    )                                                  # (B,H)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A[None, :])                       # (B,H)
+
+    xdt = xs * dt[..., None]                           # (B,H,P)
+    h = state.ssm * a[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", xdt, B_)
+    y = jnp.einsum("bhpn,bn->bhp", h, C_)
+    y = y + xs * params["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, d_inner).astype(cdt) * jax.nn.silu(z)
+    y = rmsnorm(y, params["norm_scale"])
+    out = (y @ params["out_proj"].astype(cdt))[:, None, :]
+    return out, SSMState(conv=new_conv.astype(state.conv.dtype), ssm=h)
+
+
+def ssm_init_params(cfg, key, dtype):
+    H, P, N, d_inner, conv_dim, d_in_proj = ssm_dims(cfg)
+    D = cfg.d_model
+    k1, k2, k3 = jax.random.split(key, 3)
+    std = D ** -0.5
+    dt_min, dt_max = 1e-3, 1e-1
+    u = jax.random.uniform(k3, (H,), minval=jnp.log(dt_min), maxval=jnp.log(dt_max))
+    dt_init = jnp.exp(u)
+    # inverse softplus so softplus(dt_bias) ~= dt_init
+    dt_bias = dt_init + jnp.log(-jnp.expm1(-dt_init))
+    return {
+        "in_proj": (jax.random.normal(k1, (D, d_in_proj)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.conv_width, conv_dim)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "A_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H)
+        ).astype(jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": (
+            jax.random.normal(k2, (d_inner, D)) * (d_inner ** -0.5)
+        ).astype(dtype),
+    }
+
+
+def ssm_param_shapes(cfg):
+    """(shape, logical_axes, dtype_kind) per parameter; dtype_kind 'p'=param
+    dtype, 'f'=float32 (small numerically-sensitive vectors)."""
+    H, P, N, d_inner, conv_dim, d_in_proj = ssm_dims(cfg)
+    D = cfg.d_model
+    return {
+        "in_proj": ((D, d_in_proj), ("embed", "ssm_inner"), "p"),
+        "conv_w": ((cfg.conv_width, conv_dim), ("conv_width", "ssm_inner"), "p"),
+        "conv_b": ((conv_dim,), ("ssm_inner",), "p"),
+        "dt_bias": ((H,), ("ssm_heads",), "f"),
+        "A_log": ((H,), ("ssm_heads",), "f"),
+        "D_skip": ((H,), ("ssm_heads",), "f"),
+        "norm_scale": ((d_inner,), ("ssm_inner",), "p"),
+        "out_proj": ((d_inner, D), ("ssm_inner", "embed"), "p"),
+    }

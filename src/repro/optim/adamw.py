@@ -1,0 +1,182 @@
+"""AdamW with cosine schedule, global-norm clipping, and optional
+block-quantized (int8) second moments — the memory-side distributed trick
+that lets trillion-parameter MoE optimizer state fit the pod
+(f32 moments for kimi-k2: 2 x 4 TB; int8 + per-block scales: ~1.06 TB).
+
+Pure-pytree implementation (no optax dependency): states mirror the param
+tree so the same sharding rules apply leaf-by-leaf.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 200
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    quantized_moments: bool = False   # int8 second moments (block=128)
+    moment_block: int = 128
+
+
+class QuantMoment(NamedTuple):
+    """int8 payload + per-block f32 scales (flat layout + pad)."""
+
+    q: jax.Array       # (padded_size,) int8
+    scale: jax.Array   # (padded_size / block,) f32
+
+
+def lr_at(cfg: OptimConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * t)
+    )
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.peak_lr * cos)
+
+
+# ---------------------------------------------------------- quantization
+def _quant(x: jax.Array, block: int) -> QuantMoment:
+    flat = x.reshape(-1)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)[:, None]).astype(jnp.int8)
+    return QuantMoment(q=q.reshape(-1), scale=scale)
+
+
+def _dequant(qm: QuantMoment, shape, block: int) -> jax.Array:
+    blocks = qm.q.reshape(-1, block).astype(jnp.float32)
+    flat = (blocks * qm.scale[:, None]).reshape(-1)
+    return flat[: math.prod(shape)].reshape(shape)
+
+
+# The second moment is non-negative with a huge dynamic range; quantizing
+# sqrt(nu) (8-bit-Adam style) halves the log-range, so the int8 grid error
+# lands on the Adam denominator roughly linearly instead of quadratically.
+def _quant_nu(x: jax.Array, block: int) -> QuantMoment:
+    return _quant(jnp.sqrt(jnp.maximum(x, 0.0)), block)
+
+
+def _dequant_nu(qm: QuantMoment, shape, block: int) -> jax.Array:
+    r = _dequant(qm, shape, block)
+    return r * r
+
+
+# ------------------------------------------------------------- optimizer
+def init_state(cfg: OptimConfig, params):
+    def leaf(p):
+        # mu and nu must be DISTINCT buffers: the train step donates the
+        # whole state and XLA rejects donating one buffer twice.
+        if cfg.quantized_moments:
+            return {
+                "mu": _quant(jnp.zeros(p.shape, jnp.float32), cfg.moment_block),
+                "nu": _quant(jnp.zeros(p.shape, jnp.float32), cfg.moment_block),
+            }
+        return {
+            "mu": jnp.zeros(p.shape, jnp.float32),
+            "nu": jnp.zeros(p.shape, jnp.float32),
+        }
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "moments": jax.tree.map(
+            leaf, params, is_leaf=lambda x: hasattr(x, "shape")
+        ),
+    }
+
+
+def state_specs(cfg: OptimConfig, param_specs_tree):
+    """ShapeDtypeStructs of the optimizer state (for the dry-run)."""
+
+    def leaf(p):
+        if cfg.quantized_moments:
+            size = math.prod(p.shape)
+            padded = size + ((-size) % cfg.moment_block)
+            qm = QuantMoment(
+                q=jax.ShapeDtypeStruct((padded,), jnp.int8),
+                scale=jax.ShapeDtypeStruct(
+                    (padded // cfg.moment_block,), jnp.float32
+                ),
+            )
+            return {"mu": qm, "nu": qm}
+        f = jax.ShapeDtypeStruct(p.shape, jnp.float32)
+        return {"mu": f, "nu": f}
+
+    return {
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+        "moments": jax.tree.map(
+            leaf, param_specs_tree,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+        ),
+    }
+
+
+def global_norm(grads) -> jax.Array:
+    leaves = jax.tree.leaves(grads)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    )
+
+
+def apply_updates(cfg: OptimConfig, params, grads, state):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    with jax.named_scope("adamw"):
+        return _apply_updates_impl(cfg, params, grads, state)
+
+
+def _apply_updates_impl(cfg: OptimConfig, params, grads, state):
+    step = state["step"]
+    lr = lr_at(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    b1, b2 = cfg.b1, cfg.b2
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def leaf(p, g, m):
+        g = g.astype(jnp.float32) * scale
+        if cfg.quantized_moments:
+            mu_f = _dequant(m["mu"], p.shape, cfg.moment_block)
+            mu_f = b1 * mu_f + (1 - b1) * g
+            nu_f = _dequant_nu(m["nu"], p.shape, cfg.moment_block)
+            nu_f = b2 * nu_f + (1 - b2) * g * g
+            mu_store = _quant(mu_f, cfg.moment_block)
+            nu_store = _quant_nu(nu_f, cfg.moment_block)
+        else:
+            mu_f = b1 * m["mu"] + (1 - b1) * g
+            nu_f = b2 * m["nu"] + (1 - b2) * g * g
+            mu_store, nu_store = mu_f, nu_f
+        upd = (mu_f / bc1) / (jnp.sqrt(nu_f / bc2) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return new_p, {"mu": mu_store, "nu": nu_store}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = tdef.flatten_up_to(state["moments"])
+    out = [leaf(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_params = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_moments = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_state = {"step": step + 1, "moments": new_moments}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

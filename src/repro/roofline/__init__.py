@@ -1,0 +1,21 @@
+"""Roofline analysis from compiled dry-run artifacts (no hardware needed).
+
+``hlo_parse``   structural parser of optimized HLO text: per-computation op
+                costs, while-loop trip-count scaling, collective byte
+                accounting.
+``analysis``    the three roofline terms + dominant-bottleneck report.
+``model_flops`` analytic MODEL_FLOPS (6ND / 2ND / decode) per architecture.
+"""
+
+from .analysis import HW, RooflineReport, analyze
+from .hlo_parse import HloCosts, parse_hlo_costs
+from .model_flops import model_flops
+
+__all__ = [
+    "HW",
+    "HloCosts",
+    "RooflineReport",
+    "analyze",
+    "model_flops",
+    "parse_hlo_costs",
+]

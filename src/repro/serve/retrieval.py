@@ -1,0 +1,142 @@
+"""Retrieval service: the paper's technique as a first-class serving feature.
+
+Pipeline:  encoder LM  ->  mean-pooled hidden state  ->  AQBC binarization
+           ->  AMIH exact angular KNN  (host index)  +  device-sharded
+           linear-scan reranker for pod-scale DBs (core.distributed).
+
+This is the production shape of the paper: binary hashing exists to make
+billion-item corpora searchable in RAM (paper §6.3.4); the LM zoo supplies
+the embeddings; AMIH supplies exact sublinear angular search over the codes.
+
+``RetrievalService.build_index`` ingests documents (token arrays), encodes,
+learns/applies AQBC, packs codes, builds the AMIH index. ``search`` encodes
+a query the same way and returns exact angular KNN (plus optionally the
+device scan used as a cross-check / distributed fallback).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import AMIHIndex, AMIHStats, linear_scan_knn, pack_bits
+from ..core import aqbc
+from ..models import Model
+from ..models.common import ArchConfig
+
+__all__ = ["RetrievalConfig", "RetrievalService"]
+
+
+@dataclass(frozen=True)
+class RetrievalConfig:
+    code_bits: int = 64
+    aqbc_iters: int = 15
+    m_tables: Optional[int] = None    # None -> paper's p/log2(n)
+    batch_size: int = 32              # encode batch
+
+
+@dataclass
+class RetrievalService:
+    cfg: ArchConfig
+    params: object
+    rcfg: RetrievalConfig = field(default_factory=RetrievalConfig)
+
+    index: Optional[AMIHIndex] = None
+    rotation: Optional[jax.Array] = None
+    db_words: Optional[np.ndarray] = None
+    shift: Optional[np.ndarray] = None   # non-negativity shift, fit at build
+
+    # ------------------------------------------------------------ encoding
+    def embed(self, token_batches: np.ndarray) -> np.ndarray:
+        """(N, S) int32 tokens -> (N, d_model) float32 mean-pooled states."""
+        # A dedicated pooled forward (final-norm hidden states, not logits):
+        from ..models import lm as lm_lib
+
+        @jax.jit
+        def pooled(tokens):
+            h = lm_lib.embed_tokens(self.cfg, self.params, tokens)
+            positions = jnp.arange(tokens.shape[1])
+            window = (
+                self.cfg.sliding_window if self.cfg.family == "hybrid" else 0
+            )
+            if self.cfg.first_k_dense:
+                h, _ = lm_lib._apply_stack(
+                    self.cfg.replace(n_experts=0),
+                    self.params["front_layers"], h, positions,
+                    window=window, moe=False,
+                )
+            h, _ = lm_lib._apply_stack(
+                self.cfg, self.params["layers"], h, positions,
+                window=window, moe=True,
+            )
+            from ..models.layers import apply_norm
+
+            h = apply_norm(h, self.params["final_norm"], self.cfg.norm)
+            return h.mean(axis=1).astype(jnp.float32)
+
+        out = []
+        B = self.rcfg.batch_size
+        toks = np.asarray(token_batches, np.int32)
+        for i in range(0, len(toks), B):
+            chunk = toks[i : i + B]
+            pad = B - len(chunk)
+            if pad:
+                chunk = np.pad(chunk, ((0, pad), (0, 0)))
+            emb = np.asarray(pooled(jnp.asarray(chunk)))
+            out.append(emb[: len(toks[i : i + B])])
+        return np.concatenate(out, axis=0)
+
+    def _shifted(self, x: np.ndarray, fit: bool) -> np.ndarray:
+        """AQBC assumes non-negative data (SIFT/BoW regime); shift into the
+        positive orthant per-dimension. The shift is FIT ON THE CORPUS and
+        reused for queries — refitting per query would zero out single
+        queries and break angle consistency."""
+        if fit:
+            self.shift = x.min(axis=0, keepdims=True)
+        return np.maximum(x - self.shift, 0.0)
+
+    # ------------------------------------------------------------ indexing
+    def build_index(self, doc_tokens: np.ndarray) -> Dict[str, float]:
+        x = self._shifted(self.embed(doc_tokens), fit=True)
+        model = aqbc.learn(
+            x, self.rcfg.code_bits, iters=self.rcfg.aqbc_iters
+        )
+        self.rotation = model.rotation
+        bits = np.asarray(aqbc.encode(jnp.asarray(x), self.rotation))
+        self.db_words = pack_bits(bits)
+        self.index = AMIHIndex.build(
+            self.db_words, self.rcfg.code_bits, m=self.rcfg.m_tables
+        )
+        return {
+            "n_docs": float(len(doc_tokens)),
+            "aqbc_objective": float(model.objective_trace[-1]),
+            "m_tables": float(self.index.m),
+        }
+
+    # -------------------------------------------------------------- search
+    def encode_query(self, query_tokens: np.ndarray) -> np.ndarray:
+        x = self.embed(
+            query_tokens[None, :] if query_tokens.ndim == 1 else query_tokens
+        )
+        x = self._shifted(x, fit=False)
+        bits = np.asarray(aqbc.encode(jnp.asarray(x), self.rotation))
+        return pack_bits(bits)
+
+    def search(
+        self, query_tokens: np.ndarray, k: int = 10
+    ) -> Tuple[np.ndarray, np.ndarray, AMIHStats]:
+        """Exact angular KNN for one query. Returns (ids, sims, stats)."""
+        assert self.index is not None, "call build_index first"
+        q_words = self.encode_query(query_tokens)[0]
+        stats = AMIHStats()
+        ids, sims = self.index.knn(q_words, k, stats=stats)
+        return ids, sims, stats
+
+    def search_linear(self, query_tokens: np.ndarray, k: int = 10):
+        """Exhaustive baseline over the same codes (cross-check)."""
+        q_words = self.encode_query(query_tokens)[0]
+        return linear_scan_knn(q_words, self.db_words, k)

@@ -1,0 +1,15 @@
+"""Training runtime: jit step construction, fault-tolerant loop,
+straggler watchdog."""
+
+from .step import TrainConfig, make_serve_step, make_train_step
+from .loop import Trainer, TrainerConfig
+from .watchdog import StragglerWatchdog
+
+__all__ = [
+    "StragglerWatchdog",
+    "TrainConfig",
+    "Trainer",
+    "TrainerConfig",
+    "make_serve_step",
+    "make_train_step",
+]

@@ -1,0 +1,12 @@
+import numpy as np
+import pytest
+
+# NOTE: deliberately NO xla_force_host_platform_device_count here — smoke
+# tests and benches must see the real single CPU device. Multi-device tests
+# spawn subprocesses that set the flag before importing jax (see
+# tests/test_distributed.py).
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

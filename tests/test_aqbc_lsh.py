@@ -1,0 +1,80 @@
+"""AQBC binarization and cross-polytope LSH baseline tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aqbc
+from repro.core.lsh import CrossPolytopeLSH
+from repro.data import clustered_features
+
+
+def test_encode_projected_is_exact_argmax():
+    """The vectorized encoder must equal brute force over all prefix sets."""
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(20, 8)).astype(np.float32))
+    bits = np.asarray(aqbc.encode_projected(v))
+    for i in range(20):
+        row = np.asarray(v[i])
+        best, best_b = -np.inf, None
+        order = np.argsort(-row)
+        for t in range(1, 9):
+            b = np.zeros(8)
+            b[order[:t]] = 1
+            score = (b @ row) / np.sqrt(t)
+            if score > best:
+                best, best_b = score, b
+        assert np.array_equal(bits[i], best_b), i
+
+
+def test_learn_objective_monotone_and_orthogonal():
+    x = clustered_features(400, dim=32, seed=1)
+    model = aqbc.learn(x, code_bits=16, iters=12)
+    R = np.asarray(model.rotation)
+    np.testing.assert_allclose(R.T @ R, np.eye(16), atol=1e-4)
+    trace = np.asarray(model.objective_trace)
+    # monotone non-decreasing up to float noise (alternating maximization)
+    assert trace[-1] >= trace[0] - 1e-5
+    assert np.all(np.diff(trace) > -1e-3)
+
+
+def test_aqbc_preserves_neighborhoods():
+    """Codes of angularly-near vectors should be closer (in angle) than
+    codes of far vectors, on average — the point of angular quantization."""
+    x = clustered_features(600, dim=64, n_clusters=8, seed=2, noise=0.05)
+    model = aqbc.learn(x, code_bits=32, iters=10)
+    bits = np.asarray(aqbc.encode(jnp.asarray(x), model.rotation)).astype(np.float64)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    bn = bits / np.maximum(np.linalg.norm(bits, axis=1, keepdims=True), 1e-9)
+    rng = np.random.default_rng(0)
+    ii = rng.integers(0, 600, 400)
+    jj = rng.integers(0, 600, 400)
+    real = (xn[ii] * xn[jj]).sum(1)
+    code = (bn[ii] * bn[jj]).sum(1)
+    # rank correlation must be clearly positive
+    from numpy import argsort
+
+    rr = np.corrcoef(argsort(argsort(real)), argsort(argsort(code)))[0, 1]
+    assert rr > 0.5, rr
+
+
+def test_lsh_recall_increases_with_probes():
+    x = clustered_features(1500, dim=32, seed=3)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    lsh = CrossPolytopeLSH.build(x, l=8, k=1, proj_dim=16, seed=0)
+    rng = np.random.default_rng(1)
+    qs = x[rng.integers(0, 1500, 40)] + 0.01 * rng.normal(size=(40, 32)).astype(np.float32)
+
+    def recall(probes):
+        hit = 0
+        for q in qs:
+            qn = q / np.linalg.norm(q)
+            truth = int(np.argmax(xn @ qn))
+            got = lsh.query(q, k_neighbors=1, probes_per_table=probes)
+            hit += int(len(got) and got[0] == truth)
+        return hit / len(qs)
+
+    r1, r8 = recall(1), recall(8)
+    assert r8 >= r1
+    assert r8 > 0.5, (r1, r8)

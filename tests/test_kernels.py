@@ -1,0 +1,144 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
+(interpret mode on CPU; the same pallas_call lowers natively on TPU)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.linear_scan import sims_against_db
+from repro.core.packing import pack_bits
+from repro.kernels import ops, ref
+
+
+def _random_codes(rng, n, p):
+    return pack_bits((rng.random((n, p)) < 0.5).astype(np.uint8))
+
+
+# ------------------------------------------------------------ oracle tests
+def test_popcount32_exact(rng):
+    v = rng.integers(0, 2**32, size=(64,), dtype=np.uint32)
+    got = np.asarray(ref.popcount32(jnp.asarray(v)))
+    want = np.bitwise_count(v)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.parametrize("p", [8, 24, 32, 64, 128, 200])
+def test_scores_ref_matches_numpy_eq3(rng, p):
+    B, N = 4, 100
+    q = _random_codes(rng, B, p)
+    db = _random_codes(rng, N, p)
+    z = np.bitwise_count(q).sum(axis=1)
+    got = np.asarray(ref.scores_ref(jnp.asarray(q), jnp.asarray(db), jnp.asarray(z)))
+    for b in range(B):
+        want = sims_against_db(q[b], db)
+        np.testing.assert_allclose(got[b], want, atol=1e-6)
+
+
+# ---------------------------------------------------- pallas kernel sweeps
+@pytest.mark.parametrize("p", [16, 32, 64, 128, 256])
+@pytest.mark.parametrize("shape", [(1, 100), (5, 1030), (9, 2048)])
+def test_hamming_scan_kernel_sweep(rng, p, shape):
+    B, N = shape
+    q = jnp.asarray(_random_codes(rng, B, p))
+    db = jnp.asarray(_random_codes(rng, N, p))
+    got = np.asarray(ops.scan_scores(q, db, use_pallas=True))
+    want = np.asarray(ops.scan_scores(q, db, use_pallas=False))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+@pytest.mark.parametrize("p", [32, 64, 128])
+@pytest.mark.parametrize("n", [64, 1000, 3000])
+def test_verify_tuples_kernel_sweep(rng, p, n):
+    q = jnp.asarray(_random_codes(rng, 1, p)[0])
+    cand = jnp.asarray(_random_codes(rng, n, p))
+    r10p, r01p = ops.verify_tuples_op(q, cand, use_pallas=True)
+    r10r, r01r = ops.verify_tuples_op(q, cand, use_pallas=False)
+    # integer outputs: exact equality, not allclose
+    assert np.array_equal(np.asarray(r10p), np.asarray(r10r))
+    assert np.array_equal(np.asarray(r01p), np.asarray(r01r))
+
+
+def test_kernel_degenerate_zero_query(rng):
+    p = 64
+    q = jnp.zeros((1, 2), jnp.uint32)
+    db = jnp.asarray(_random_codes(rng, 256, p))
+    got = np.asarray(ops.scan_scores(q, db, use_pallas=True))
+    assert np.all(got == 0.0)  # zero query -> sim defined as 0
+
+
+def test_kernel_zero_codes_in_db(rng):
+    p = 32
+    q = jnp.asarray(_random_codes(rng, 1, p))
+    db_bits = (np.random.default_rng(0).random((128, p)) < 0.5).astype(np.uint8)
+    db_bits[7] = 0  # plant an all-zero code
+    db = jnp.asarray(pack_bits(db_bits))
+    got = np.asarray(ops.scan_scores(q, db, use_pallas=True))
+    assert got[0, 7] == 0.0
+
+
+# ------------------------------------------------------------ streaming topk
+@pytest.mark.parametrize("chunk", [64, 1000, 1 << 14])
+@pytest.mark.parametrize("k", [1, 10, 100])
+def test_scan_topk_streaming_exact(rng, chunk, k):
+    p, B, N = 64, 3, 2500
+    q = jnp.asarray(_random_codes(rng, B, p))
+    db = jnp.asarray(_random_codes(rng, N, p))
+    sims, ids = ops.scan_topk(q, db, k, chunk=chunk)
+    full = np.asarray(ops.scan_scores(q, db, use_pallas=False))
+    for b in range(B):
+        want = np.sort(full[b])[::-1][: min(k, N)]
+        np.testing.assert_allclose(
+            np.sort(np.asarray(sims[b]))[::-1], want, atol=1e-6
+        )
+        # ids must be consistent with their sims
+        np.testing.assert_allclose(
+            full[b][np.asarray(ids[b])], np.asarray(sims[b]), atol=1e-6
+        )
+
+
+# ------------------------------------------------- block-max pruned scan
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("mode", ["clustered", "uniform"])
+def test_scan_topk_pruned_exact(rng, use_pallas, mode):
+    from repro.data import synthetic_binary_codes, synthetic_queries
+
+    # pruning needs n_blocks >> k: 128 blocks, k=5
+    p, B, N, k = 64, 4, 16384, 5
+    db_bits = synthetic_binary_codes(N, p, seed=3, mode=mode)
+    q_bits = synthetic_queries(db_bits, B, seed=4)
+    q = jnp.asarray(pack_bits(q_bits))
+    db = jnp.asarray(pack_bits(db_bits))
+    sims_p, ids_p, frac = ops.scan_topk_pruned(
+        q, db, k, blk=128, use_pallas=use_pallas
+    )
+    sims_f, ids_f = ops.scan_topk(q, db, k, chunk=512)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(sims_p), axis=1),
+        np.sort(np.asarray(sims_f), axis=1),
+        atol=1e-6,
+    )
+    assert 0.0 < float(frac) <= 1.0
+    if mode == "clustered":  # pruning must actually bite on clustered data
+        assert float(frac) < 0.5, float(frac)
+
+
+def test_blockmax_kernel_matches_ref(rng):
+    from repro.kernels.blockmax_scan import blockmax_scores
+
+    p, B, N, blk = 96, 3, 2048, 256
+    q = jnp.asarray(_random_codes(rng, B, p))
+    db = jnp.asarray(_random_codes(rng, N, p))
+    z = jnp.asarray(np.bitwise_count(np.asarray(q)).sum(axis=1), jnp.int32)
+    got = np.asarray(blockmax_scores(q, z, db, blk_n=blk, interpret=True))
+    full = np.asarray(ops.scan_scores(q, db, use_pallas=False))
+    want = full.reshape(B, N // blk, blk).max(axis=-1)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_scan_topk_k_ge_n(rng):
+    p, B, N = 32, 2, 37
+    q = jnp.asarray(_random_codes(rng, B, p))
+    db = jnp.asarray(_random_codes(rng, N, p))
+    sims, ids = ops.scan_topk(q, db, 50, chunk=16)
+    assert sims.shape == (B, N)
+    assert set(np.asarray(ids[0]).tolist()) == set(range(N))

@@ -1,0 +1,131 @@
+"""AdamW (+ int8 moments), schedules, gradient compression tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import (
+    OptimConfig,
+    apply_error_feedback,
+    apply_updates,
+    dequantize_block_int8,
+    init_state,
+    lr_at,
+    quantize_block_int8,
+    state_specs,
+)
+
+
+def _toy_params(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w": jax.random.normal(k1, (8, 16)),
+        "b": jnp.zeros((16,)),
+        "deep": {"v": jax.random.normal(k2, (5,))},
+    }
+
+
+def test_lr_schedule_shape():
+    cfg = OptimConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100,
+                      min_lr_ratio=0.1)
+    lrs = [float(lr_at(cfg, jnp.int32(s))) for s in range(110)]
+    assert lrs[0] < lrs[5] < lrs[9]               # warmup rising
+    assert abs(lrs[10] - 1.0) < 0.02              # peak
+    assert lrs[50] < lrs[10]                      # decaying
+    assert lrs[105] == pytest.approx(0.1, abs=1e-6)  # floor
+
+
+def test_adamw_descends_quadratic():
+    cfg = OptimConfig(peak_lr=0.05, warmup_steps=1, decay_steps=1000,
+                      weight_decay=0.0)
+    params = {"x": jnp.array([3.0, -2.0])}
+    state = init_state(cfg, params)
+
+    def loss(p):
+        return jnp.sum(p["x"] ** 2)
+
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state, _ = apply_updates(cfg, params, g, state)
+    assert float(loss(params)) < 1e-2
+
+
+def test_grad_clipping_applied():
+    cfg = OptimConfig(peak_lr=1e-3, clip_norm=1.0, warmup_steps=1)
+    params = {"x": jnp.zeros((4,))}
+    state = init_state(cfg, params)
+    big = {"x": jnp.full((4,), 1e6)}
+    _, _, m = apply_updates(cfg, params, big, state)
+    assert float(m["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_quantized_moments_track_full_precision():
+    key = jax.random.key(0)
+    params_a = _toy_params(key)
+    params_b = jax.tree.map(jnp.copy, params_a)
+    cfg_f = OptimConfig(peak_lr=1e-2, warmup_steps=1, quantized_moments=False)
+    cfg_q = OptimConfig(peak_lr=1e-2, warmup_steps=1, quantized_moments=True,
+                        moment_block=32)
+    sa, sb = init_state(cfg_f, params_a), init_state(cfg_q, params_b)
+
+    def loss(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["deep"]["v"] ** 2)
+
+    for _ in range(20):
+        ga = jax.grad(loss)(params_a)
+        gb = jax.grad(loss)(params_b)
+        params_a, sa, _ = apply_updates(cfg_f, params_a, ga, sa)
+        params_b, sb, _ = apply_updates(cfg_q, params_b, gb, sb)
+    wa = np.asarray(params_a["w"])
+    wb = np.asarray(params_b["w"])
+    assert np.max(np.abs(wa - wb)) < 0.05 * (np.abs(wa).max() + 1e-6)
+
+
+def test_state_specs_match_init():
+    for quant in (False, True):
+        cfg = OptimConfig(quantized_moments=quant, moment_block=32)
+        params = _toy_params(jax.random.key(1))
+        state = init_state(cfg, params)
+        specs = state_specs(
+            cfg,
+            jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), params),
+        )
+        flat_s = jax.tree.leaves(state)
+        flat_t = jax.tree.leaves(
+            specs, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct)
+        )
+        assert len(flat_s) == len(flat_t)
+        for a, b in zip(flat_s, flat_t):
+            assert a.shape == b.shape and a.dtype == b.dtype
+
+
+# ------------------------------------------------------------- compression
+@given(seed=st.integers(0, 2**31 - 1), block=st.sampled_from([16, 64, 256]))
+@settings(max_examples=30, deadline=None)
+def test_int8_quantization_error_bounded(seed, block):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32) * 10)
+    q, scale = quantize_block_int8(x, block)
+    back = dequantize_block_int8(q, scale, x.shape)
+    err = np.abs(np.asarray(back - x))
+    # error per block bounded by scale/2 = max|x_block| / 254
+    assert err.max() <= float(scale.max()) * 0.51 + 1e-7
+
+
+def test_error_feedback_cancels_bias():
+    """Sum of reconstructed grads + final residual == sum of true grads
+    (telescoping identity of EF), so accumulated bias stays bounded."""
+    rng = np.random.default_rng(0)
+    res = jnp.zeros((256,))
+    total_true = np.zeros((256,))
+    total_recon = np.zeros((256,))
+    for _ in range(50):
+        g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+        q, scale, res = apply_error_feedback(g, res, block=64)
+        recon = dequantize_block_int8(q, scale, (256,))
+        total_true += np.asarray(g)
+        total_recon += np.asarray(recon)
+    gap = np.abs(total_true - (total_recon + np.asarray(res)))
+    assert gap.max() < 1e-3  # exact telescoping up to float add order

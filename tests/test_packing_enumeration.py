@@ -1,0 +1,114 @@
+"""Bit packing, substring extraction, and bucket enumeration tests."""
+
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.enumeration import tuple_bucket_values
+from repro.core.packing import (
+    codes_to_ints,
+    extract_substring,
+    hamming_tuples,
+    ints_to_codes,
+    n_words,
+    pack_bits,
+    popcount,
+    substring_spans,
+    unpack_bits,
+)
+
+
+@given(
+    n=st.integers(1, 20),
+    p=st.integers(1, 200),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_pack_unpack_roundtrip(n, p, seed):
+    rng = np.random.default_rng(seed)
+    bits = (rng.random((n, p)) < 0.5).astype(np.uint8)
+    words = pack_bits(bits)
+    assert words.shape == (n, n_words(p))
+    assert np.array_equal(unpack_bits(words, p), bits)
+    assert np.array_equal(popcount(words), bits.sum(axis=1))
+
+
+@given(p=st.integers(1, 128), seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=80, deadline=None)
+def test_hamming_tuples_match_definition(p, seed):
+    rng = np.random.default_rng(seed)
+    q = (rng.random(p) < 0.5).astype(np.uint8)
+    db = (rng.random((50, p)) < 0.5).astype(np.uint8)
+    r10, r01 = hamming_tuples(pack_bits(q), pack_bits(db))
+    want10 = ((q[None, :] == 1) & (db == 0)).sum(axis=1)
+    want01 = ((q[None, :] == 0) & (db == 1)).sum(axis=1)
+    assert np.array_equal(r10, want10)
+    assert np.array_equal(r01, want01)
+
+
+@given(
+    p=st.integers(2, 160),
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=80, deadline=None)
+def test_extract_substring_matches_bits(p, m, seed):
+    m = min(m, p)
+    rng = np.random.default_rng(seed)
+    bits = (rng.random((8, p)) < 0.5).astype(np.uint8)
+    words = pack_bits(bits)
+    for lo, hi in substring_spans(p, m):
+        if hi - lo > 64:
+            continue
+        vals = extract_substring(words, lo, hi)
+        for row in range(8):
+            want = 0
+            for j in range(lo, hi):
+                want |= int(bits[row, j]) << (j - lo)
+            assert int(vals[row]) == want
+
+
+def test_substring_spans_cover_disjoint():
+    spans = substring_spans(70, 3)
+    assert spans == [(0, 24), (24, 47), (47, 70)]
+
+
+def test_codes_to_ints_roundtrip(rng):
+    bits = (rng.random((30, 64)) < 0.5).astype(np.uint8)
+    words = pack_bits(bits)
+    vals = codes_to_ints(words, 64)
+    back = ints_to_codes(vals, 64)
+    assert np.array_equal(back, words)
+
+
+@given(
+    width=st.integers(1, 16),
+    seed=st.integers(0, 2**31 - 1),
+    a=st.integers(0, 4),
+    b=st.integers(0, 4),
+)
+@settings(max_examples=100, deadline=None)
+def test_tuple_bucket_values_exact(width, seed, a, b):
+    """Every enumerated bucket lies at exactly tuple (a,b); count = Eq. 4."""
+    rng = np.random.default_rng(seed)
+    q = int(rng.integers(0, 2**width))
+    z = q.bit_count()
+    vals = tuple_bucket_values(q, width, z, a, b)
+    if not (a <= z and b <= width - z):
+        assert vals.size == 0
+        return
+    assert vals.size == math.comb(z, a) * math.comb(width - z, b)
+    for v in vals[: min(len(vals), 50)]:
+        v = int(v)
+        r10 = (q & ~v).bit_count()
+        r01 = (~q & v & ((1 << width) - 1)).bit_count()
+        assert (r10, r01) == (a, b)
+    assert len(set(vals.tolist())) == vals.size  # no duplicates
+
+
+def test_enumeration_cap():
+    import pytest
+
+    with pytest.raises(ValueError):
+        tuple_bucket_values(0b1111111100000000, 16, 8, 4, 4, cap=10)

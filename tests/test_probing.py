@@ -1,0 +1,76 @@
+"""Property tests for the probing-sequence generator (paper RQ1, Props 1-3)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.probing import (
+    closed_form_prefix,
+    first_anchor,
+    probing_sequence,
+    second_anchor,
+)
+from repro.core.tuples import all_valid_tuples, rhat, sim_value
+
+
+@given(p=st.integers(1, 40), data=st.data())
+@settings(max_examples=120, deadline=None)
+def test_sequence_is_permutation_of_all_valid_tuples(p, data):
+    z = data.draw(st.integers(0, p))
+    seq = list(probing_sequence(p, z))
+    assert sorted(seq) == sorted(all_valid_tuples(p, z))
+
+
+@given(p=st.integers(1, 40), data=st.data())
+@settings(max_examples=120, deadline=None)
+def test_sequence_sim_nonincreasing(p, data):
+    """Proposition 3: emitted sims never increase."""
+    z = data.draw(st.integers(0, p))
+    sims = [sim_value(p, z, *t) for t in probing_sequence(p, z)]
+    for a, b in zip(sims, sims[1:]):
+        assert a >= b - 1e-12
+
+
+@given(p=st.integers(2, 64), data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_closed_form_prefix_agrees(p, data):
+    """The Prop-2 closed form is a prefix of the general algorithm's order
+    (up to exact ties, which both orders break by (radius, r1))."""
+    z = data.draw(st.integers(1, p))
+    prefix = closed_form_prefix(p, z)
+    general = []
+    gen = probing_sequence(p, z)
+    for _ in range(len(prefix)):
+        general.append(next(gen))
+    assert prefix == general
+
+
+def test_limit_caps_output():
+    out = list(probing_sequence(32, 12, limit=7))
+    assert len(out) == 7
+    assert out[0] == (0, 0)
+
+
+def test_anchors_match_paper_example2():
+    # paper Example 2: z=10, p=32, v=(1,4): first anchor (0,6), second (2,3)
+    assert first_anchor(32, 10, 1, 4) == (0, 6)
+    assert second_anchor(32, 10, 1, 4) == (2, 3)
+
+
+def test_first_anchor_clamps_to_valid_range():
+    # when x+y+1 exceeds p-z, the first anchor shifts ones into r1
+    p, z = 8, 6  # p - z = 2
+    assert first_anchor(p, z, 0, 2) == (1, 2)  # c = max(0, 3-2) = 1
+
+
+def test_zero_query_hamming_order():
+    # z == 0: cosine undefined; falls back to Hamming (ascending r2)
+    seq = list(probing_sequence(6, 0))
+    assert seq == [(0, r) for r in range(7)]
+
+
+@given(p=st.integers(1, 28), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_no_duplicates(p, data):
+    z = data.draw(st.integers(0, p))
+    seq = list(probing_sequence(p, z))
+    assert len(seq) == len(set(seq))

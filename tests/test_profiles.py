@@ -1,0 +1,82 @@
+"""Optimized-profile features: TP head padding, profile overrides."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_tiny
+from repro.configs.profiles import optimized_opt_rules, optimized_overrides
+from repro.models import Model
+
+
+def test_head_padding_rounds_up_and_respects_gqa():
+    cfg = get_config("llava_next_34b").replace(pad_heads_to_multiple=16)
+    assert cfg.n_heads == 56            # published count untouched
+    assert cfg.n_heads_padded == 64     # 56 -> 64, divisible by kv=8
+    cfg2 = get_config("llama3_8b").replace(pad_heads_to_multiple=16)
+    assert cfg2.n_heads_padded == 32    # already divisible: unchanged
+    assert get_config("llama3_8b").n_heads_padded == 32  # pad off
+
+
+def test_padded_model_runs_and_params_padded(rng):
+    cfg = get_tiny("llava_next_34b").replace(
+        compute_dtype="float32", n_heads=3, n_kv_heads=1,
+        pad_heads_to_multiple=4,
+    )
+    assert cfg.n_heads_padded == 4
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    # stacked layers: (L, d, hq_padded, dh)
+    assert params["layers"]["attn"]["wq"].shape[2] == 4
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(1, cfg.vocab_size, (2, 16)), jnp.int32
+        ),
+        "vision_embeds": 0.01 * jnp.ones(
+            (2, cfg.vision_tokens, cfg.d_model), jnp.float32
+        ),
+    }
+    logits, _ = model.forward(params, batch)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_optimized_overrides_are_valid_config_fields(arch):
+    over = optimized_overrides(arch)
+    cfg = get_config(arch).replace(**over)  # raises on unknown fields
+    assert cfg.n_heads_padded % 1 == 0
+    if cfg.vocab_size >= 100_000:
+        assert cfg.ce_chunk > 0
+
+
+def test_optimized_opt_rules_shape():
+    rules = optimized_opt_rules()
+    assert rules["embed"] == ("data",)
+    assert rules["experts"] == "model"  # base rules preserved
+
+
+def test_optimized_tiny_configs_still_train(rng):
+    """The profile knobs must not break the training path (ce_chunk +
+    padding + chunks exercised together on a reduced config)."""
+    over = optimized_overrides("llava_next_34b")
+    cfg = get_tiny("llava_next_34b").replace(
+        compute_dtype="float32",
+        pad_heads_to_multiple=over.get("pad_heads_to_multiple", 0),
+        ce_chunk=16,
+    )
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(1, cfg.vocab_size, (2, 24)), jnp.int32
+        ),
+        "vision_embeds": 0.01 * jnp.ones(
+            (2, cfg.vision_tokens, cfg.d_model), jnp.float32
+        ),
+    }
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    g = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0

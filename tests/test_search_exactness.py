@@ -1,0 +1,149 @@
+"""The paper's headline property: AMIH / single-table search is EXACT —
+identical to linear scan for the angular KNN problem (up to ties)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AMIHIndex,
+    AMIHStats,
+    SearchStats,
+    SingleTableIndex,
+    linear_scan_knn,
+    pack_bits,
+)
+from repro.core.linear_scan import sims_against_db
+from repro.data import synthetic_binary_codes, synthetic_queries
+
+
+def _check_knn_equal(ids, sims, ids_l, sims_l, q_words, db_words):
+    """Equality up to ties: sims must match exactly as multisets."""
+    np.testing.assert_allclose(
+        np.asarray(sims), np.asarray(sims_l), atol=1e-9
+    )
+    # every returned id must actually have the sim it was returned with
+    all_sims = sims_against_db(q_words, db_words)
+    np.testing.assert_allclose(all_sims[ids], sims, atol=1e-9)
+
+
+@given(
+    p=st.sampled_from([16, 24, 32, 48, 64, 96, 128]),
+    n=st.integers(10, 400),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+    mode=st.sampled_from(["uniform", "clustered"]),
+)
+@settings(max_examples=60, deadline=None)
+def test_amih_equals_linear_scan(p, n, k, seed, mode):
+    db_bits = synthetic_binary_codes(n, p, seed=seed, mode=mode)
+    q_bits = synthetic_queries(db_bits, 1, seed=seed + 1)[0]
+    db = pack_bits(db_bits)
+    q = pack_bits(q_bits)
+    idx = AMIHIndex.build(db, p)
+    stats = AMIHStats()
+    ids, sims = idx.knn(q, k, stats=stats)
+    ids_l, sims_l = linear_scan_knn(q, db, k)
+    _check_knn_equal(ids, sims, ids_l, sims_l, q, db)
+
+
+@given(
+    m=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=30, deadline=None)
+def test_amih_exact_for_any_table_count(m, seed):
+    p, n, k = 48, 200, 10
+    db_bits = synthetic_binary_codes(n, p, seed=seed)
+    q = pack_bits(synthetic_queries(db_bits, 1, seed=seed + 9)[0])
+    db = pack_bits(db_bits)
+    idx = AMIHIndex.build(db, p, m=m)
+    ids, sims = idx.knn(q, k)
+    _, sims_l = linear_scan_knn(q, db, k)
+    np.testing.assert_allclose(sims, sims_l, atol=1e-9)
+
+
+def test_amih_extreme_queries():
+    p, n = 64, 500
+    rng = np.random.default_rng(3)
+    db = pack_bits((rng.random((n, p)) < 0.5).astype(np.uint8))
+    idx = AMIHIndex.build(db, p)
+    for q_bits in (np.zeros(p, np.uint8), np.ones(p, np.uint8)):
+        q = pack_bits(q_bits)
+        ids, sims = idx.knn(q, 5)
+        _, sims_l = linear_scan_knn(q, db, 5)
+        np.testing.assert_allclose(sims, sims_l, atol=1e-9)
+
+
+def test_amih_k_larger_than_n():
+    p, n = 32, 20
+    rng = np.random.default_rng(4)
+    db = pack_bits((rng.random((n, p)) < 0.5).astype(np.uint8))
+    q = pack_bits((rng.random(p) < 0.5).astype(np.uint8))
+    idx = AMIHIndex.build(db, p)
+    ids, sims = idx.knn(q, 100)
+    assert len(ids) == n
+    _, sims_l = linear_scan_knn(q, db, 100)
+    np.testing.assert_allclose(sims, sims_l, atol=1e-9)
+
+
+def test_amih_with_duplicate_codes():
+    p = 24
+    rng = np.random.default_rng(5)
+    base = (rng.random((10, p)) < 0.5).astype(np.uint8)
+    db_bits = np.repeat(base, 7, axis=0)  # each code 7 times
+    db = pack_bits(db_bits)
+    q = pack_bits(base[0])
+    idx = AMIHIndex.build(db, p)
+    ids, sims = idx.knn(q, 7)
+    assert np.all(sims == sims[0]) and sims[0] == pytest.approx(1.0)
+
+
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    r1=st.integers(0, 6),
+    r2=st.integers(0, 6),
+)
+@settings(max_examples=30, deadline=None)
+def test_r1r2_near_neighbor_problem(seed, r1, r2):
+    """Definition 4: search_radius returns exactly the codes with
+    componentwise tuple <= (r1, r2)."""
+    p, n = 32, 300
+    db_bits = synthetic_binary_codes(n, p, seed=seed, flip_prob=0.15)
+    q_bits = synthetic_queries(db_bits, 1, seed=seed + 7)[0]
+    db, q = pack_bits(db_bits), pack_bits(q_bits)
+    idx = AMIHIndex.build(db, p, m=3)
+    got = idx.search_radius(q, r1, r2)
+    from repro.core.packing import hamming_tuples
+
+    e1, e2 = hamming_tuples(q, db)
+    want = np.flatnonzero((e1 <= r1) & (e2 <= r2))
+    assert np.array_equal(got, want)
+
+
+def test_single_table_exact():
+    p, n, k = 16, 300, 8
+    rng = np.random.default_rng(11)
+    db = pack_bits((rng.random((n, p)) < 0.5).astype(np.uint8))
+    st_idx = SingleTableIndex.build(db, p)
+    for i in range(10):
+        q = pack_bits((rng.random(p) < 0.5).astype(np.uint8))
+        stats = SearchStats()
+        ids, sims = st_idx.knn(q, k, stats=stats)
+        _, sims_l = linear_scan_knn(q, db, k)
+        np.testing.assert_allclose(sims, sims_l, atol=1e-9)
+        assert stats.probes > 0
+
+
+def test_amih_stats_accounting():
+    p, n = 64, 1000
+    db_bits = synthetic_binary_codes(n, p, seed=0)
+    q = pack_bits(synthetic_queries(db_bits, 1, seed=1)[0])
+    idx = AMIHIndex.build(pack_bits(db_bits), p)
+    stats = AMIHStats()
+    idx.knn(q, 10, stats=stats)
+    assert stats.probes > 0
+    assert stats.verified <= n          # dedup: never verify twice
+    assert stats.tuples_processed >= 1
+    # sublinearity on clustered data: probes far below brute-force buckets
+    assert stats.probes < 10 * n

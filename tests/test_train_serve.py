@@ -1,0 +1,269 @@
+"""Training loop, checkpointing, fault tolerance, serving engine,
+retrieval service — the runtime integration tests."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer, latest_step, restore, save
+from repro.configs import get_tiny
+from repro.data import DataConfig, TokenPipeline
+from repro.models import Model
+from repro.optim import OptimConfig
+from repro.serve import (
+    RetrievalConfig,
+    RetrievalService,
+    ServeConfig,
+    ServeEngine,
+)
+from repro.train import (
+    StragglerWatchdog,
+    TrainConfig,
+    Trainer,
+    TrainerConfig,
+)
+
+CFG = get_tiny("llama3_8b").replace(compute_dtype="float32")
+OCFG = OptimConfig(peak_lr=1e-3, warmup_steps=5, decay_steps=40)
+DCFG = DataConfig(vocab_size=CFG.vocab_size, seq_len=64, global_batch=8)
+
+
+# ------------------------------------------------------------- data pipeline
+def test_pipeline_deterministic_and_sharded():
+    full = TokenPipeline(DCFG).global_batch_at(3)["tokens"]
+    parts = []
+    for s in range(4):
+        pl = TokenPipeline(DCFG, shard_id=s, num_shards=4, start_step=3)
+        parts.append(pl.next_batch()["tokens"])
+    assert np.array_equal(np.concatenate(parts, axis=0), full)
+
+
+def test_pipeline_checkpoint_resume_bit_exact():
+    p1 = TokenPipeline(DCFG)
+    for _ in range(5):
+        p1.next_batch()
+    state = p1.state_dict()
+    want = p1.next_batch()["tokens"]
+    p2 = TokenPipeline(DCFG)
+    p2.load_state_dict(state)
+    got = p2.next_batch()["tokens"]
+    assert np.array_equal(got, want)
+
+
+def test_pipeline_has_learnable_structure():
+    toks = TokenPipeline(DCFG).global_batch_at(0)["tokens"]
+    assert toks.min() >= 0 and toks.max() < DCFG.vocab_size
+    # Zipfian skew: the most common token should be much more frequent
+    counts = np.bincount(toks.reshape(-1), minlength=DCFG.vocab_size)
+    assert counts.max() > 3 * np.median(counts[counts > 0])
+
+
+# -------------------------------------------------------------- checkpointer
+def test_checkpoint_roundtrip_and_atomicity():
+    tree = {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.bfloat16)},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 7, tree, {"note": "x"})
+        assert latest_step(d) == 7
+        got, meta = restore(d, tree)
+        assert meta["note"] == "x"
+        np.testing.assert_array_equal(np.asarray(got["a"]), np.asarray(tree["a"]))
+        assert got["b"]["c"].dtype == np.dtype(jnp.bfloat16)
+        # a stale tmp dir must never be visible as a checkpoint
+        os.makedirs(os.path.join(d, "step_00000009.tmp.123"))
+        assert latest_step(d) == 7
+
+
+def test_checkpointer_async_and_retention():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2, async_save=True)
+        for s in (1, 2, 3, 4):
+            ck.save(s, {"x": jnp.full((4,), s)})
+        ck.wait()
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(d) if n.startswith("step_")
+        )
+        assert steps == [3, 4]
+        got, _ = ck.restore({"x": jnp.zeros((4,))})
+        assert np.all(np.asarray(got["x"]) == 4)
+
+
+def test_restore_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        save(d, 0, {"x": jnp.zeros((4,))})
+        with pytest.raises(ValueError):
+            restore(d, {"x": jnp.zeros((5,))})
+
+
+# ------------------------------------------------------------------ trainer
+def test_trainer_loss_falls_and_restart_bit_exact():
+    with tempfile.TemporaryDirectory() as d:
+        kw = dict(
+            cfg=CFG, ocfg=OCFG, tcfg=TrainConfig(microbatches=2),
+            data_cfg=DCFG,
+        )
+        tr = Trainer(
+            rcfg=TrainerConfig(
+                total_steps=14, checkpoint_every=7, checkpoint_dir=d,
+                async_checkpoint=False,
+            ),
+            **kw,
+        )
+        out = tr.run()
+        assert out["losses"][-1] < out["losses"][0]
+
+        # continue 14 -> 20 in a new trainer == one uninterrupted 20-run
+        tr2 = Trainer(
+            rcfg=TrainerConfig(
+                total_steps=20, checkpoint_every=7, checkpoint_dir=d,
+                async_checkpoint=False,
+            ),
+            **kw,
+        )
+        out2 = tr2.run()
+
+    with tempfile.TemporaryDirectory() as d2:
+        tr_ref = Trainer(
+            rcfg=TrainerConfig(
+                total_steps=20, checkpoint_every=7, checkpoint_dir=d2,
+                async_checkpoint=False,
+            ),
+            **kw,
+        )
+        ref = tr_ref.run()
+    # the resumed run's tail must match the uninterrupted run bit-exactly
+    np.testing.assert_array_equal(
+        np.asarray(out2["losses"]), np.asarray(ref["losses"][14:])
+    )
+
+
+def test_trainer_crash_recovery():
+    with tempfile.TemporaryDirectory() as d:
+        boom = {"armed": True}
+
+        def inject(step):
+            if step == 9 and boom["armed"]:
+                boom["armed"] = False
+                raise RuntimeError("host died")
+
+        tr = Trainer(
+            cfg=CFG, ocfg=OCFG, tcfg=TrainConfig(),
+            rcfg=TrainerConfig(
+                total_steps=12, checkpoint_every=4, checkpoint_dir=d,
+                async_checkpoint=False,
+            ),
+            data_cfg=DCFG,
+            failure_injector=inject,
+        )
+        out = tr.run()
+        assert out["final_step"] == 12
+        assert out["restarts"] == 1
+
+
+def test_trainer_gives_up_after_max_restarts():
+    with tempfile.TemporaryDirectory() as d:
+        def always_fail(step):
+            raise RuntimeError("permanently broken")
+
+        tr = Trainer(
+            cfg=CFG, ocfg=OCFG, tcfg=TrainConfig(),
+            rcfg=TrainerConfig(
+                total_steps=5, checkpoint_dir=d, max_restarts=2,
+                async_checkpoint=False,
+            ),
+            data_cfg=DCFG,
+            failure_injector=always_fail,
+        )
+        with pytest.raises(RuntimeError):
+            tr.run()
+        assert tr.restarts == 3
+
+
+# ----------------------------------------------------------------- watchdog
+def test_watchdog_flags_stragglers():
+    events = []
+    wd = StragglerWatchdog(window=20, threshold=2.0, warmup=2,
+                           on_flag=events.append)
+    for i in range(20):
+        wd.observe(i, 0.10)
+    assert not events
+    assert wd.observe(20, 0.35)      # 3.5x median
+    assert events and events[0].ratio == pytest.approx(3.5, rel=0.01)
+    # healthy steps afterwards don't flag
+    assert not wd.observe(21, 0.11)
+    # consecutive slow steps escalate
+    wd2 = StragglerWatchdog(window=20, warmup=2, escalate_after=2)
+    for i in range(10):
+        wd2.observe(i, 0.1)
+    wd2.observe(10, 0.5)
+    wd2.observe(11, 0.5)
+    assert wd2.should_escalate
+
+
+# ------------------------------------------------------------------- serving
+def test_engine_greedy_matches_sequential_reference(rng):
+    model = Model(CFG)
+    params = model.init_params(jax.random.key(0))
+    prompt = rng.integers(1, CFG.vocab_size, 10).astype(np.int32)
+    eng = ServeEngine(CFG, params, ServeConfig(max_batch=3, max_seq=64,
+                                               max_new_tokens=6))
+    rid = eng.submit(prompt)
+    out = eng.run_until_drained()[rid]
+
+    logits, cache = model.prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+    tmpl = model.init_cache(1, 64)
+    cache = jax.tree.map(
+        lambda c, t: jnp.pad(c, [(0, ts - cs) for cs, ts in zip(c.shape, t.shape)]),
+        cache, tmpl,
+    )
+    ref = [int(np.argmax(np.asarray(logits)[0]))]
+    pos = len(prompt)
+    for _ in range(5):
+        lg, cache = model.decode_step(
+            params, cache, jnp.asarray([[ref[-1]]], jnp.int32), jnp.int32(pos)
+        )
+        ref.append(int(np.argmax(np.asarray(lg)[0])))
+        pos += 1
+    assert out == ref
+
+
+def test_engine_continuous_batching(rng):
+    model = Model(CFG)
+    params = model.init_params(jax.random.key(0))
+    eng = ServeEngine(CFG, params, ServeConfig(max_batch=2, max_seq=64,
+                                               max_new_tokens=4))
+    rids = [
+        eng.submit(rng.integers(1, CFG.vocab_size, int(rng.integers(3, 9))))
+        for _ in range(5)
+    ]
+    res = eng.run_until_drained()
+    assert sorted(res) == sorted(rids)
+    assert all(len(v) == 4 for v in res.values())
+    assert eng.stats["prefills"] == 5
+
+
+# ----------------------------------------------------------------- retrieval
+def test_retrieval_service_exact_and_sublinear(rng):
+    cfg = get_tiny("gemma_2b").replace(compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    svc = RetrievalService(
+        cfg, params, RetrievalConfig(code_bits=32, aqbc_iters=5, m_tables=4)
+    )
+    docs = rng.integers(1, cfg.vocab_size, (150, 24)).astype(np.int32)
+    info = svc.build_index(docs)
+    assert info["n_docs"] == 150
+    for qi in (3, 77):
+        ids, sims, stats = svc.search(docs[qi], k=5)
+        ids_l, sims_l = svc.search_linear(docs[qi], k=5)
+        np.testing.assert_allclose(sims, sims_l, atol=1e-9)
+        assert stats.probes < 150  # sublinear probing on self-queries
+        # the query IS a corpus doc, so its code exists in the db:
+        # the top similarity must be exactly 1.0 (ties may outrank the id)
+        assert sims[0] == pytest.approx(1.0)

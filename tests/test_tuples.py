@@ -1,0 +1,114 @@
+"""Unit + property tests for the Hamming-distance-tuple algebra (paper §3-4)."""
+
+import math
+from fractions import Fraction
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tuples import (
+    all_valid_tuples,
+    is_valid_tuple,
+    rhat,
+    sim_compare,
+    sim_squared_fraction,
+    sim_value,
+    tuple_count,
+)
+
+
+def test_sim_matches_eq3_example():
+    # q=(1,1,1,0,0,0), b=(0,1,0,1,1,1): tuple (2,3)  (paper Example 1)
+    p, z = 6, 3
+    r1, r2 = 2, 3
+    # direct cosine: <q,b>=1, |q|=sqrt(3), |b|=sqrt(4)
+    want = 1 / (math.sqrt(3) * math.sqrt(4))
+    assert sim_value(p, z, r1, r2) == pytest.approx(want)
+
+
+def test_sim_self_is_one():
+    assert sim_value(64, 30, 0, 0) == pytest.approx(1.0)
+
+
+def test_degenerate_zero_query():
+    assert sim_value(8, 0, 0, 3) == 0.0
+
+
+def test_degenerate_zero_code():
+    # z - r1 + r2 == 0 means the code is all-zeros
+    assert sim_value(8, 3, 3, 0) == 0.0
+
+
+@given(
+    p=st.integers(1, 64),
+    data=st.data(),
+)
+@settings(max_examples=200, deadline=None)
+def test_sim_squared_consistent_with_float(p, data):
+    z = data.draw(st.integers(0, p))
+    r1 = data.draw(st.integers(0, z))
+    r2 = data.draw(st.integers(0, p - z))
+    frac = sim_squared_fraction(p, z, r1, r2)
+    f = sim_value(p, z, r1, r2)
+    assert math.isclose(float(frac), f * f, abs_tol=1e-12)
+
+
+@given(p=st.integers(1, 48), data=st.data())
+@settings(max_examples=200, deadline=None)
+def test_sim_compare_total_order(p, data):
+    z = data.draw(st.integers(0, p))
+    tuples = all_valid_tuples(p, z)
+    idx = st.integers(0, len(tuples) - 1)
+    a = tuples[data.draw(idx)]
+    b = tuples[data.draw(idx)]
+    c = sim_compare(p, z, a, b)
+    fa, fb = sim_value(p, z, *a), sim_value(p, z, *b)
+    if fa > fb + 1e-12:
+        assert c == 1
+    elif fb > fa + 1e-12:
+        assert c == -1
+    # exact comparator must be antisymmetric
+    assert sim_compare(p, z, b, a) == -c
+
+
+def test_prop1_monotone_in_r01_at_fixed_radius():
+    """Prop 1: at fixed Hamming distance r, sim grows with r_{0->1}."""
+    p, z = 45, 32
+    for r in range(1, 13):
+        sims = [
+            sim_value(p, z, r - b, b)
+            for b in range(r + 1)
+            if is_valid_tuple(p, z, r - b, b)
+        ]
+        assert all(sims[i] <= sims[i + 1] + 1e-15 for i in range(len(sims) - 1))
+
+
+def test_prop2_ball_separation():
+    """Prop 2 (t=1): while z > r(r+1), C(q,r) beats everything outside."""
+    p = 64
+    for z in (10, 32, 50):
+        r_h = rhat(z)
+        assert z > r_h * (r_h + 1) or r_h == 0
+        assert z <= (r_h + 1) * (r_h + 2)
+        # min sim inside ball at radius r_h vs max sim outside
+        inside_min = sim_value(p, z, r_h, 0)
+        outside_max = sim_value(p, z, 0, r_h + 1) if r_h + 1 <= p - z else 0.0
+        assert inside_min >= outside_max - 1e-12
+
+
+def test_tuple_count_eq4():
+    p, z = 10, 4
+    assert tuple_count(p, z, 1, 2) == math.comb(4, 1) * math.comb(6, 2)
+    assert tuple_count(p, z, 5, 0) == 0  # invalid r1 > z
+    total = sum(tuple_count(p, z, a, b) for a, b in all_valid_tuples(p, z))
+    assert total == 2 ** p  # tuples partition the whole hypercube
+
+
+@given(z=st.integers(0, 10_000))
+@settings(max_examples=300, deadline=None)
+def test_rhat_is_integer_root(z):
+    r = rhat(z)
+    assert r >= 0
+    assert r * (r + 1) <= z  # inside the guarantee
+    assert (r + 1) * (r + 2) > z
