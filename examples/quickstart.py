@@ -1,8 +1,9 @@
 """Quickstart: the paper's algorithm end to end in two minutes on CPU.
 
 1. build a synthetic binary dataset (AQBC-like clustered codes),
-2. build the AMIH index,
-3. run exact angular KNN queries and verify against linear scan,
+2. build a search engine by backend name (the unified SearchEngine API),
+3. run exact angular KNN as ONE batched query call and verify against the
+   linear-scan backend,
 4. print the paper-style cost accounting (probes / verifications).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -12,41 +13,42 @@ import time
 
 import numpy as np
 
-from repro.core import AMIHIndex, AMIHStats, linear_scan_knn, pack_bits
+from repro.core import make_engine, pack_bits
 from repro.data import synthetic_binary_codes, synthetic_queries
 
 
 def main():
-    p, n, k = 64, 200_000, 10
-    print(f"dataset: n={n:,} codes x {p} bits")
+    p, n, k, B = 64, 200_000, 10, 5
+    print(f"dataset: n={n:,} codes x {p} bits, {B} queries in one batch")
     db_bits = synthetic_binary_codes(n, p, seed=0)
     db = pack_bits(db_bits)
-    q_bits = synthetic_queries(db_bits, 5, seed=1)
-    qs = pack_bits(q_bits)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=1))
 
     t0 = time.perf_counter()
-    index = AMIHIndex.build(db, p)
+    amih = make_engine("amih", db, p)
     print(f"indexed in {time.perf_counter() - t0:.2f}s "
-          f"(m={index.m} tables, paper's m = p/log2 n)")
+          f"(m={amih.index.m} tables, paper's m = p/log2 n)")
+    scan = make_engine("linear_scan", db, p)
 
-    for i, q in enumerate(qs):
-        stats = AMIHStats()
-        t0 = time.perf_counter()
-        ids, sims = index.knn(q, k, stats=stats)
-        t_amih = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ids, sims, stats = amih.knn_batch(qs, k)
+    t_amih = time.perf_counter() - t0
 
-        t0 = time.perf_counter()
-        ids_l, sims_l = linear_scan_knn(q, db, k)
-        t_scan = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    ids_l, sims_l, _ = scan.knn_batch(qs, k)
+    t_scan = time.perf_counter() - t0
 
-        assert np.allclose(sims, sims_l, atol=1e-9), "exactness violated!"
-        print(
-            f"q{i}: top-{k} sims {np.round(sims[:3], 4)}..., "
-            f"AMIH {1e3 * t_amih:6.2f}ms vs scan {1e3 * t_scan:7.2f}ms "
-            f"({t_scan / max(t_amih, 1e-9):6.1f}x) | probes={stats.probes} "
-            f"verified={stats.verified} ({stats.verified / n:.2%} of db)"
-        )
-    print("all queries exact — AMIH == linear scan, orders faster.")
+    assert np.array_equal(sims, sims_l), "exactness violated!"
+    agg = stats.aggregate()
+    for i, s in enumerate(stats.per_query):
+        print(f"q{i}: top-{k} sims {np.round(sims[i, :3], 4)}..., "
+              f"probes={s.probes} verified={s.verified} "
+              f"({s.verified / n:.2%} of db)")
+    print(f"batch of {B}: AMIH {1e3 * t_amih:6.2f}ms vs scan "
+          f"{1e3 * t_scan:7.2f}ms ({t_scan / max(t_amih, 1e-9):6.1f}x) | "
+          f"total probes={agg['probes']} verified={agg['verified']}")
+    print("all queries exact — engine('amih') == engine('linear_scan'), "
+          "orders faster.")
 
 
 if __name__ == "__main__":

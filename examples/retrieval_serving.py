@@ -41,14 +41,19 @@ def main():
           f"(AQBC objective {info['aqbc_objective']:.3f}, "
           f"m={int(info['m_tables'])} tables)")
 
-    # ---- exact angular search, cross-checked against linear scan ----
-    for qi in (11, 222):
-        ids, sims, stats = svc.search(docs[qi], k=5)
+    # ---- exact angular search: queued queries, batched knn_batch steps ----
+    qids = [svc.submit(docs[qi]) for qi in (11, 222, 7, 333)]
+    results = svc.run_queued(k=5)
+    for qid, qi in zip(qids, (11, 222, 7, 333)):
+        ids, sims = results[qid]
         ids_l, sims_l = svc.search_linear(docs[qi], k=5)
         assert np.allclose(sims, sims_l, atol=1e-9)
         print(f"query=doc[{qi}]: hits {ids[:5].tolist()} "
-              f"sims {np.round(sims[:5], 3).tolist()} "
-              f"probes={stats.probes} verified={stats.verified} (exact)")
+              f"sims {np.round(sims[:5], 3).tolist()} (exact, batched)")
+
+    # single-query convenience path still returns per-query counters
+    ids, sims, stats = svc.search(docs[11], k=5)
+    print(f"doc[11] solo: probes={stats.probes} verified={stats.verified}")
 
     # ---- generation on the same weights: batched serving engine ----
     eng = ServeEngine(

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification: the one command run locally and in CI.
+# Usage: scripts/verify.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -1,16 +1,35 @@
 """The paper's primary contribution: exact angular KNN over binary codes.
 
 Public surface:
+  - SearchEngine / make_engine              (THE query API: one batched
+    ``knn_batch`` over every backend — "linear_scan", "single_table",
+    "amih" — selected by name; see engine.py. New callers start here.)
   - probing_sequence / closed_form_prefix   (RQ1, Props 1-3)
   - SingleTableIndex                        (single-table search, §4)
   - AMIHIndex / AMIHStats                   (angular multi-index hashing, §5)
   - linear_scan_knn                         (the paper's baseline)
   - aqbc                                    (binarization used in §6)
   - distributed                             (sharded scan for pod-scale DBs)
+
+The index classes remain importable for algorithm-level work; serving,
+benchmarks, and examples go through ``make_engine(backend, db_words, p)``
+and ``engine.knn_batch(q_words, k) -> (ids, sims, EngineStats)``.
 """
 
 from .amih import AMIHIndex, AMIHStats, default_num_tables
-from .linear_scan import linear_scan_knn, sims_against_db
+from .engine import (
+    ENGINES,
+    EngineStats,
+    SearchEngine,
+    available_backends,
+    make_engine,
+)
+from .linear_scan import (
+    linear_scan_knn,
+    sims_against_db,
+    sims_batch_against_db,
+    topk_from_sims,
+)
 from .packing import (
     hamming_tuples,
     n_words,
@@ -26,12 +45,17 @@ from .tuples import rhat, sim_value, tuple_count
 __all__ = [
     "AMIHIndex",
     "AMIHStats",
+    "ENGINES",
+    "EngineStats",
+    "SearchEngine",
     "SearchStats",
     "SingleTableIndex",
+    "available_backends",
     "closed_form_prefix",
     "default_num_tables",
     "hamming_tuples",
     "linear_scan_knn",
+    "make_engine",
     "n_words",
     "pack_bits",
     "popcount",
@@ -39,7 +63,9 @@ __all__ = [
     "rhat",
     "sim_value",
     "sims_against_db",
+    "sims_batch_against_db",
     "substring_spans",
+    "topk_from_sims",
     "tuple_count",
     "unpack_bits",
 ]

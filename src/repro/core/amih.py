@@ -15,13 +15,22 @@ once (dedup bitmap) by computing their exact full-code tuple with popcounts.
 
 Counters mirror the paper's cost model (Eq. 13): probes (bucket lookups) and
 candidate verifications are the two cost terms.
+
+Batched queries (``knn_batch``) follow the multi-index-hashing serving
+shape: queries with identical ``(p, z)`` share one probing-sequence
+enumeration (the heap + exact-rational ordering is per-*group*, not
+per-query), advance in lockstep over full-code tuples, and verify their
+candidate blocks through a pluggable backend — vectorized NumPy popcounts
+or the Pallas ``verify_tuples`` kernel (``verify_backend="pallas"``), which
+gathers the candidate codes, pads to the kernel block size, and masks the
+padding (see kernels/ops.verify_tuples_op).
 """
 
 from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
@@ -97,6 +106,23 @@ class _SubTable:
 
 
 @dataclass
+class _QueryState:
+    """Per-query probing state inside a batched search."""
+
+    qi: int                       # row in the query batch
+    q_words: np.ndarray
+    q_subs: List[int]
+    z_subs: List[int]
+    seen: np.ndarray
+    probed: set
+    pending: Dict[Tuple[int, int], List[np.ndarray]]
+    out_ids: List[int]
+    out_sims: List[float]
+    stats: Optional[AMIHStats]
+    done: bool = False
+
+
+@dataclass
 class AMIHIndex:
     """Exact angular-KNN index over n packed p-bit codes."""
 
@@ -104,12 +130,29 @@ class AMIHIndex:
     m: int
     db_words: np.ndarray = field(repr=False)   # (n, W) uint32 — for verification
     tables: List[_SubTable] = field(repr=False, default_factory=list)
+    # Candidate-verification backend: "numpy" (vectorized popcounts on host)
+    # or "pallas" (kernels/verify_tuples via ops.verify_tuples_op — native
+    # on TPU, interpret-mode elsewhere). Both are exact.
+    verify_backend: str = "numpy"
+    # Materialized probing-sequence prefixes keyed by query popcount z:
+    # the heap + exact-rational tuple ordering is query-independent given
+    # (p, z), so it is enumerated once per z across all queries and
+    # batches. Total memory is bounded by (z+1)(p-z+1) tuples per z.
+    _probing_cache: Dict[int, Tuple[List[Tuple[int, int]], Iterator]] = field(
+        default_factory=dict, repr=False, compare=False
+    )
 
     # ------------------------------------------------------------- build
     @classmethod
     def build(
-        cls, db_words: np.ndarray, p: int, m: Optional[int] = None
+        cls,
+        db_words: np.ndarray,
+        p: int,
+        m: Optional[int] = None,
+        verify_backend: str = "numpy",
     ) -> "AMIHIndex":
+        if verify_backend not in ("numpy", "pallas"):
+            raise ValueError(f"unknown verify_backend {verify_backend!r}")
         db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
         n = db_words.shape[0]
         if m is None:
@@ -131,7 +174,10 @@ class AMIHIndex:
                     sorted_ids=np.arange(n, dtype=np.int64)[order],
                 )
             )
-        return cls(p=p, m=m, db_words=db_words, tables=tables)
+        return cls(
+            p=p, m=m, db_words=db_words, tables=tables,
+            verify_backend=verify_backend,
+        )
 
     @property
     def n(self) -> int:
@@ -151,44 +197,117 @@ class AMIHIndex:
         tuple (all codes of one tuple are exactly equidistant in angle).
         """
         q_words = np.asarray(q_words, dtype=WORD_DTYPE)
-        z = int(popcount(q_words[None, :])[0])
-        k = min(k, self.n)
-        if k == 0:
-            return np.empty(0, dtype=np.int64), np.empty(0)
+        ids, sims = self.knn_batch(
+            q_words[None, :], k,
+            stats=None if stats is None else [stats],
+            enumeration_cap=enumeration_cap,
+        )
+        return ids[0], sims[0]
 
+    def knn_batch(
+        self,
+        q_words: np.ndarray,
+        k: int,
+        stats: Optional[List[AMIHStats]] = None,
+        enumeration_cap: Optional[int] = 2_000_000,
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact angular KNN for a batch of packed queries: (B, W) -> ids,
+        sims each (B, min(k, n)).
+
+        Queries with equal popcount z share one probing-sequence
+        enumeration and advance in lockstep; each keeps its own dedup
+        bitmap / probed set / pending buckets, so per-query results and
+        counters are identical to ``knn`` run query-by-query.
+        """
+        q_words = np.ascontiguousarray(
+            np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
+        )
+        B = q_words.shape[0]
+        if stats is not None and len(stats) != B:
+            raise ValueError(f"stats list has {len(stats)} entries for B={B}")
+        k = min(k, self.n)
+        out_ids = np.empty((B, k), dtype=np.int64)
+        out_sims = np.empty((B, k), dtype=np.float64)
+        if k == 0:
+            return out_ids, out_sims
+
+        zs = popcount(q_words)
+        groups: Dict[int, List[int]] = {}
+        for qi in range(B):
+            groups.setdefault(int(zs[qi]), []).append(qi)
+
+        for z, qis in groups.items():
+            states = [self._make_state(q_words[qi], qi, stats) for qi in qis]
+            r_hat = rhat(z)
+            for (r1, r2) in self._probing_iter(z):
+                active = [s for s in states if not s.done]
+                if not active:
+                    break
+                s_val = sim_value(self.p, z, r1, r2)
+                for s in active:
+                    if s.stats is not None:
+                        s.stats.tuples_processed += 1
+                        s.stats.max_radius = max(s.stats.max_radius, r1 + r2)
+                        if r1 + r2 > r_hat:
+                            s.stats.exceeded_rhat = True
+                    self._probe_for_tuple(
+                        s.q_words, r1, r2, s.q_subs, s.z_subs, s.probed,
+                        s.seen, s.pending, s.stats, enumeration_cap,
+                    )
+                    hits = s.pending.pop((r1, r2), None)
+                    if hits:
+                        ids = np.sort(np.concatenate(hits))
+                        take = min(ids.size, k - len(s.out_ids))
+                        s.out_ids.extend(ids[:take].tolist())
+                        s.out_sims.extend([s_val] * take)
+                        if len(s.out_ids) >= k:
+                            s.done = True
+            for s in states:
+                out_ids[s.qi] = s.out_ids
+                out_sims[s.qi] = s.out_sims
+        return out_ids, out_sims
+
+    def _probing_iter(self, z: int) -> Iterator[Tuple[int, int]]:
+        """Probing sequence for popcount z, served from the per-index
+        cache: already-materialized tuples replay from the prefix list;
+        going deeper pulls the underlying generator and extends it."""
+        entry = self._probing_cache.get(z)
+        if entry is None:
+            entry = ([], probing_sequence(self.p, z))
+            self._probing_cache[z] = entry
+        prefix, gen = entry
+        i = 0
+        while True:
+            if i >= len(prefix):
+                try:
+                    prefix.append(next(gen))
+                except StopIteration:
+                    return
+            yield prefix[i]
+            i += 1
+
+    def _make_state(
+        self,
+        q_words: np.ndarray,
+        qi: int,
+        stats: Optional[List[AMIHStats]],
+    ) -> _QueryState:
         q_subs = [
             int(extract_substring(q_words[None, :], t.lo, t.hi)[0])
             for t in self.tables
         ]
-        z_subs = [int(v).bit_count() for v in q_subs]
-
-        seen = np.zeros(self.n, dtype=bool)
-        probed: set = set()                       # (table, a, b)
-        pending: Dict[Tuple[int, int], List[np.ndarray]] = {}
-        out_ids: List[int] = []
-        out_sims: List[float] = []
-        r_hat = rhat(z)
-
-        for (r1, r2) in probing_sequence(self.p, z):
-            if stats is not None:
-                stats.tuples_processed += 1
-                stats.max_radius = max(stats.max_radius, r1 + r2)
-                if r1 + r2 > r_hat:
-                    stats.exceeded_rhat = True
-            self._probe_for_tuple(
-                q_words, r1, r2, q_subs, z_subs, probed, seen, pending,
-                stats, enumeration_cap,
-            )
-            hits = pending.pop((r1, r2), None)
-            if hits:
-                ids = np.sort(np.concatenate(hits))
-                s = sim_value(self.p, z, r1, r2)
-                take = min(ids.size, k - len(out_ids))
-                out_ids.extend(ids[:take].tolist())
-                out_sims.extend([s] * take)
-                if len(out_ids) >= k:
-                    break
-        return np.asarray(out_ids, dtype=np.int64), np.asarray(out_sims)
+        return _QueryState(
+            qi=qi,
+            q_words=q_words,
+            q_subs=q_subs,
+            z_subs=[int(v).bit_count() for v in q_subs],
+            seen=np.zeros(self.n, dtype=bool),
+            probed=set(),
+            pending={},
+            out_ids=[],
+            out_sims=[],
+            stats=None if stats is None else stats[qi],
+        )
 
     def search_radius(
         self,
@@ -289,9 +408,36 @@ class AMIHIndex:
             if stats is not None:
                 stats.verified += cand.size
             # exact full-code tuples for all new candidates, vectorized
-            e1, e2 = hamming_tuples(q_words, self.db_words[cand])
+            e1, e2 = self._verify_candidates(q_words, cand)
             for t in np.unique(np.stack([e1, e2], axis=1), axis=0):
                 mask = (e1 == t[0]) & (e2 == t[1])
                 pending.setdefault((int(t[0]), int(t[1])), []).append(
                     cand[mask]
                 )
+
+    def _verify_candidates(
+        self, q_words: np.ndarray, cand: np.ndarray
+    ) -> Tuple[np.ndarray, np.ndarray]:
+        """Exact full-code tuples of a gathered candidate block.
+
+        "numpy": host popcounts (hamming_tuples). "pallas": the
+        verify_tuples kernel via kernels/ops.verify_tuples_op, which pads
+        the gathered block to the kernel block size and masks the padding.
+        Both return identical int64 (r10, r01); jax is imported lazily so
+        the core package stays NumPy-only unless the knob is turned.
+        """
+        if self.verify_backend == "pallas":
+            import jax.numpy as jnp
+
+            from ..kernels.ops import verify_tuples_op
+
+            r10, r01 = verify_tuples_op(
+                jnp.asarray(q_words),
+                jnp.asarray(self.db_words[cand]),
+                use_pallas=True,
+            )
+            return (
+                np.asarray(r10).astype(np.int64),
+                np.asarray(r01).astype(np.int64),
+            )
+        return hamming_tuples(q_words, self.db_words[cand])

@@ -20,7 +20,10 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .. import jax_compat
 
 from ..kernels import ops
 
@@ -78,7 +81,7 @@ def sharded_scan_topk(
         offset = (idx * shard_rows).astype(jnp.int32)
         return _local_topk_then_merge(q, db_shard, offset, k, chunk, db_axes)
 
-    fn = jax.shard_map(
+    fn = jax_compat.shard_map(
         body,
         mesh=mesh,
         in_specs=(P(), P(db_axes)),

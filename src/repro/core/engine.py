@@ -1,0 +1,329 @@
+"""Unified batched SearchEngine: one query API over every exact-KNN
+algorithm in the repo.
+
+Every caller (serving, benchmarks, examples, tests) talks to one surface:
+
+    engine = make_engine("amih", db_words, p, verify_backend="pallas")
+    ids, sims, stats = engine.knn_batch(q_words, k)   # q_words: (B, W)
+
+Backends (registry below):
+
+  - "linear_scan"  — exhaustive Eq. 3 scan, batched over queries with
+                     chunked popcounts (the paper's comparator).
+  - "single_table" — one CSR-sorted table probed in the paper's tuple
+                     order (§4); practical for p <= 64.
+  - "amih"         — angular multi-index hashing (§5): probing-sequence
+                     sharing across same-z queries and Pallas-backed
+                     candidate verification (``verify_backend="pallas"``).
+
+All three are EXACT: ``knn_batch`` returns, for every row, results whose
+sims match per-query ``linear_scan_knn`` bit-for-bit (up to ties inside
+one Hamming tuple — equal sims by construction). ``EngineStats`` carries
+per-query counter objects plus aggregated totals, the serving-side cost
+accounting of the paper's Eq. 13.
+"""
+
+from __future__ import annotations
+
+import abc
+from dataclasses import dataclass, field, fields as dc_fields
+from typing import Any, ClassVar, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .amih import AMIHIndex, AMIHStats
+from .enumeration import EnumerationCapExceeded
+from .linear_scan import (
+    sims_against_db,
+    sims_batch_against_db,
+    topk_from_sims,
+)
+from .packing import WORD_DTYPE, n_words, popcount
+from .single_table import SearchStats, SingleTableIndex
+
+__all__ = [
+    "ENGINES",
+    "EngineStats",
+    "SearchEngine",
+    "available_backends",
+    "make_engine",
+    "register_engine",
+]
+
+
+@dataclass
+class EngineStats:
+    """Batched-search accounting: one stats object per query row plus
+    lazily-aggregated totals.
+
+    ``per_query`` holds one counter object per query row (AMIHStats or
+    SearchStats — every backend provides them); ``aggregate()`` sums
+    every numeric counter across queries (bools count occurrences), so
+    e.g. ``stats.aggregate()["verified"]`` is the batch's total candidate
+    verifications. Counters that are per-query maxima (``max_radius``)
+    aggregate with max, not sum.
+    """
+
+    backend: str
+    queries: int = 0
+    per_query: List[Optional[object]] = field(default_factory=list)
+
+    _MAX_COUNTERS = frozenset({"max_radius"})
+
+    def aggregate(self) -> Dict[str, int]:
+        totals: Dict[str, int] = {}
+        for s in self.per_query:
+            if s is None:
+                continue
+            for f in dc_fields(s):
+                v = getattr(s, f.name)
+                if not isinstance(v, (bool, int, np.bool_, np.integer)):
+                    continue
+                if f.name in self._MAX_COUNTERS:
+                    totals[f.name] = max(totals.get(f.name, 0), int(v))
+                else:
+                    totals[f.name] = totals.get(f.name, 0) + int(v)
+        return totals
+
+    def total(self, counter: str) -> int:
+        return self.aggregate().get(counter, 0)
+
+
+class SearchEngine(abc.ABC):
+    """Exact batched angular-KNN engine over packed binary codes.
+
+    Subclasses register under ``name`` and implement ``build`` (index
+    construction from a packed (n, W) code array) and ``knn_batch``.
+    """
+
+    name: ClassVar[str]
+
+    @classmethod
+    @abc.abstractmethod
+    def build(
+        cls, db_words: np.ndarray, p: int, **cfg: Any
+    ) -> "SearchEngine":
+        ...
+
+    @abc.abstractmethod
+    def knn_batch(
+        self, q_words: np.ndarray, k: int
+    ) -> Tuple[np.ndarray, np.ndarray, EngineStats]:
+        """(B, W) packed queries -> (ids (B, k'), sims (B, k'), stats)
+        with k' = min(k, n). A 1-D (W,) query is treated as B=1."""
+        ...
+
+    # ------------------------------------------------------------ helpers
+    @property
+    @abc.abstractmethod
+    def n(self) -> int:
+        ...
+
+    def _check_queries(self, q_words: np.ndarray, p: int) -> np.ndarray:
+        q = np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
+        if q.ndim != 2 or q.shape[1] != n_words(p):
+            raise ValueError(
+                f"queries must be (B, {n_words(p)}) packed words for "
+                f"p={p}; got shape {np.asarray(q_words).shape}"
+            )
+        return np.ascontiguousarray(q)
+
+
+ENGINES: Dict[str, type] = {}
+
+
+def register_engine(cls: type) -> type:
+    ENGINES[cls.name] = cls
+    return cls
+
+
+def available_backends() -> List[str]:
+    return sorted(ENGINES)
+
+
+def make_engine(
+    backend: str, db_words: np.ndarray, p: int, **cfg: Any
+) -> SearchEngine:
+    """Build a search engine by backend name (see ``available_backends``)."""
+    try:
+        cls = ENGINES[backend]
+    except KeyError:
+        raise ValueError(
+            f"unknown search backend {backend!r}; "
+            f"available: {available_backends()}"
+        ) from None
+    return cls.build(db_words, p, **cfg)
+
+
+@register_engine
+class LinearScanEngine(SearchEngine):
+    """Exhaustive baseline: batched Eq. 3 sims + per-row deterministic
+    top-k (identical selection code path to ``linear_scan_knn``)."""
+
+    name = "linear_scan"
+
+    def __init__(self, db_words: np.ndarray, p: int, chunk: int):
+        self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
+        self.p = p
+        self.chunk = chunk
+
+    @classmethod
+    def build(
+        cls, db_words: np.ndarray, p: int, chunk: int = 1 << 15, **cfg: Any
+    ) -> "LinearScanEngine":
+        if cfg:
+            raise TypeError(f"unknown linear_scan options: {sorted(cfg)}")
+        return cls(db_words, p, chunk)
+
+    @property
+    def n(self) -> int:
+        return self.db_words.shape[0]
+
+    # Cap on live sims-matrix elements: query rows are processed in
+    # groups of max(1, _SIMS_BUDGET // n) so peak scratch stays ~64 MB
+    # float64 regardless of B and N, while each row is still computed
+    # and top-k'd whole — bit-identical to per-query linear_scan_knn.
+    _SIMS_BUDGET = 1 << 23
+
+    def knn_batch(self, q_words, k):
+        q = self._check_queries(q_words, self.p)
+        B = q.shape[0]
+        k_eff = min(k, self.n)
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        group = max(1, self._SIMS_BUDGET // max(self.n, 1))
+        for lo in range(0, B, group):
+            sims = sims_batch_against_db(
+                q[lo : lo + group], self.db_words, chunk=self.chunk
+            )
+            for i in range(sims.shape[0]):
+                ids_out[lo + i], sims_out[lo + i] = topk_from_sims(
+                    sims[i], k_eff
+                )
+        # retrieved = codes scored per query: the whole DB, exhaustively.
+        stats = EngineStats(
+            backend=self.name, queries=B,
+            per_query=[SearchStats(retrieved=self.n) for _ in range(B)],
+        )
+        return ids_out, sims_out, stats
+
+
+@register_engine
+class SingleTableEngine(SearchEngine):
+    """Single hash table (paper §4); exact for p <= 64.
+
+    The raw index has no cost guard: on sparse occupancy a single tuple's
+    bucket enumeration is C(z, r1)*C(p-z, r2) — combinatorial. The engine
+    caps it (default ``max(8n, 16384)``) and degrades the affected query
+    to an exact linear scan (the paper's §5 observation), flagged in
+    ``SearchStats.fell_back_to_scan``. Counters accumulated before the
+    fallback are kept — they are probes actually performed.
+    """
+
+    name = "single_table"
+
+    def __init__(self, index: SingleTableIndex, db_words, enumeration_cap):
+        self.index = index
+        self.p = index.p
+        self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
+        self.enumeration_cap = enumeration_cap
+
+    @classmethod
+    def build(
+        cls,
+        db_words: np.ndarray,
+        p: int,
+        enumeration_cap: Optional[int] = None,
+        **cfg: Any,
+    ) -> "SingleTableEngine":
+        if cfg:
+            raise TypeError(f"unknown single_table options: {sorted(cfg)}")
+        n = np.asarray(db_words).shape[0]
+        if enumeration_cap is None:
+            enumeration_cap = max(8 * n, 1 << 14)
+        return cls(SingleTableIndex.build(db_words, p), db_words,
+                   enumeration_cap)
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    def knn_batch(self, q_words, k):
+        q = self._check_queries(q_words, self.p)
+        B = q.shape[0]
+        k_eff = min(k, self.n)
+        zs = popcount(q)
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        per_query: List[SearchStats] = []
+        for i in range(B):
+            st = SearchStats()
+            if zs[i] == 0:
+                # Zero-norm query: cosine is undefined, every code scores
+                # exactly 0.0, so any k ids are a correct answer — and the
+                # table would enumerate C(p, r2) buckets per tuple trying
+                # to find them. Emit the deterministic tie order directly.
+                ids_out[i] = np.arange(k_eff, dtype=np.int64)
+                sims_out[i] = 0.0
+            else:
+                try:
+                    ids_out[i], sims_out[i] = self.index.knn(
+                        q[i], k_eff, stats=st,
+                        enumeration_cap=self.enumeration_cap,
+                    )
+                except EnumerationCapExceeded:
+                    # probing has lost to exhaustive verification for
+                    # this query.
+                    st.fell_back_to_scan = True
+                    ids_out[i], sims_out[i] = topk_from_sims(
+                        sims_against_db(q[i], self.db_words), k_eff
+                    )
+            per_query.append(st)
+        return ids_out, sims_out, EngineStats(
+            backend=self.name, queries=B, per_query=per_query
+        )
+
+
+@register_engine
+class AMIHEngine(SearchEngine):
+    """Angular multi-index hashing (paper §5): batch-aware probing with
+    per-(p, z) probing-sequence sharing and NumPy/Pallas verification."""
+
+    name = "amih"
+
+    def __init__(self, index: AMIHIndex, enumeration_cap):
+        self.index = index
+        self.p = index.p
+        self.enumeration_cap = enumeration_cap
+
+    @classmethod
+    def build(
+        cls,
+        db_words: np.ndarray,
+        p: int,
+        m: Optional[int] = None,
+        verify_backend: str = "numpy",
+        enumeration_cap: Optional[int] = 2_000_000,
+        **cfg: Any,
+    ) -> "AMIHEngine":
+        if cfg:
+            raise TypeError(f"unknown amih options: {sorted(cfg)}")
+        index = AMIHIndex.build(
+            db_words, p, m=m, verify_backend=verify_backend
+        )
+        return cls(index, enumeration_cap)
+
+    @property
+    def n(self) -> int:
+        return self.index.n
+
+    def knn_batch(self, q_words, k):
+        q = self._check_queries(q_words, self.p)
+        B = q.shape[0]
+        per_query = [AMIHStats() for _ in range(B)]
+        ids, sims = self.index.knn_batch(
+            q, k, stats=per_query, enumeration_cap=self.enumeration_cap
+        )
+        return ids, sims, EngineStats(
+            backend=self.name, queries=B, per_query=per_query
+        )

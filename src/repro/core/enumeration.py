@@ -19,7 +19,19 @@ from typing import List, Optional
 
 import numpy as np
 
-__all__ = ["bit_positions", "combination_masks", "tuple_bucket_values"]
+__all__ = [
+    "EnumerationCapExceeded",
+    "bit_positions",
+    "combination_masks",
+    "tuple_bucket_values",
+]
+
+
+class EnumerationCapExceeded(ValueError):
+    """A tuple's bucket enumeration would exceed the caller's cap.
+
+    Subclasses ValueError for backward compatibility; callers that fall
+    back to scanning catch THIS type so unrelated ValueErrors surface."""
 
 
 def bit_positions(value: int, width: int) -> List[int]:
@@ -58,7 +70,7 @@ def tuple_bucket_values(
         return np.empty(0, dtype=np.uint64)
     count = math.comb(z, a) * math.comb(width - z, b)
     if cap is not None and count > cap:
-        raise ValueError(
+        raise EnumerationCapExceeded(
             f"bucket enumeration for tuple ({a},{b}) on width={width}, z={z} "
             f"would produce {count} > cap={cap} buckets"
         )

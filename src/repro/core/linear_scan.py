@@ -14,7 +14,12 @@ import numpy as np
 
 from .packing import WORD_DTYPE, hamming_tuples, popcount
 
-__all__ = ["linear_scan_knn", "sims_against_db"]
+__all__ = [
+    "linear_scan_knn",
+    "sims_against_db",
+    "sims_batch_against_db",
+    "topk_from_sims",
+]
 
 
 def sims_against_db(q_words: np.ndarray, db_words: np.ndarray) -> np.ndarray:
@@ -35,15 +40,36 @@ def sims_against_db(q_words: np.ndarray, db_words: np.ndarray) -> np.ndarray:
     return sims
 
 
-def linear_scan_knn(
-    q_words: np.ndarray, db_words: np.ndarray, k: int
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Exact angular KNN by exhaustive scan.
+def sims_batch_against_db(
+    q_words: np.ndarray, db_words: np.ndarray, chunk: int = 1 << 15
+) -> np.ndarray:
+    """(B, W) x (N, W) -> (B, N) float64 Eq. 3 sims, chunked over the DB
+    so peak scratch stays O(B * chunk * W) regardless of N.
 
-    Returns (ids, sims), sorted by (-sim, id) for determinism. ``k`` is
-    clamped to the dataset size.
+    Row i is elementwise-identical to ``sims_against_db(q_words[i], db)``
+    (same broadcasted float ops), which is what lets batched callers reuse
+    the per-query top-K selection bit-for-bit.
     """
-    sims = sims_against_db(q_words, db_words)
+    q = np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
+    db = np.asarray(db_words, dtype=WORD_DTYPE)
+    B, N = q.shape[0], db.shape[0]
+    z = popcount(q).astype(np.float64)                  # (B,)
+    out = np.empty((B, N), dtype=np.float64)
+    for lo in range(0, max(N, 1), chunk):
+        blk = db[lo : lo + chunk]                       # (C, W)
+        r10 = np.bitwise_count(q[:, None, :] & ~blk[None, :, :]).sum(-1)
+        r01 = np.bitwise_count(~q[:, None, :] & blk[None, :, :]).sum(-1)
+        norm_b_sq = (z[:, None] - r10 + r01).astype(np.float64)
+        num = (z[:, None] - r10).astype(np.float64)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            sims = num / (np.sqrt(z)[:, None] * np.sqrt(norm_b_sq))
+        sims = np.where(norm_b_sq == 0, 0.0, sims)
+        out[:, lo : lo + chunk] = np.where(z[:, None] == 0, 0.0, sims)
+    return out
+
+
+def topk_from_sims(sims: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Deterministic top-k of one query's sim row: sorted by (-sim, id)."""
     n = sims.shape[0]
     k = min(k, n)
     if k == n:
@@ -53,3 +79,15 @@ def linear_scan_knn(
     order = np.lexsort((idx, -sims[idx]))
     ids = idx[order]
     return ids, sims[ids]
+
+
+def linear_scan_knn(
+    q_words: np.ndarray, db_words: np.ndarray, k: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact angular KNN by exhaustive scan.
+
+    Returns (ids, sims), sorted by (-sim, id) for determinism. ``k`` is
+    clamped to the dataset size.
+    """
+    sims = sims_against_db(q_words, db_words)
+    return topk_from_sims(sims, k)

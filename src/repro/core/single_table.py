@@ -34,6 +34,10 @@ class SearchStats:
     tuples_processed: int = 0  # Hamming-distance tuples traversed
     max_radius: int = 0        # largest Hamming distance reached
     exceeded_rhat: bool = False
+    # Set by SingleTableEngine when a tuple's bucket enumeration exceeded
+    # the cap and the query degraded to an exact linear scan (the paper's
+    # §5 observation, applied to the single table).
+    fell_back_to_scan: bool = False
 
 
 @dataclass

@@ -1,0 +1,51 @@
+"""Version-guarded aliases for jax APIs that moved between releases.
+
+The repo targets current jax but must run on whatever the container
+pins. Import moved/renamed symbols from here instead of guarding at each
+call site. (jax.sharding.AxisType has its own guard in launch/mesh.py.)
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.4.38 exposes the with-path helpers on jax.tree
+    tree_flatten_with_path = jax.tree.flatten_with_path
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.tree_util import tree_flatten_with_path  # noqa: F401
+
+try:  # newer jax promotes shard_map out of experimental
+    shard_map = jax.shard_map
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import (
+        shard_map as _shard_map_experimental,
+    )
+
+    def shard_map(f, **kwargs):
+        """experimental.shard_map, accepting the modern kwarg spelling
+        (check_vma was named check_rep before the promotion)."""
+        if "check_vma" in kwargs:
+            kwargs["check_rep"] = kwargs.pop("check_vma")
+        return _shard_map_experimental(f, **kwargs)
+
+def axis_size(axis_name):
+    """jax.lax.axis_size, or the psum(1) identity on jax without it."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def cost_analysis_dict(compiled):
+    """compiled.cost_analysis() returned [dict] before jax 0.5, dict after."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        return ca[0] if ca else {}
+    return ca or {}
+
+
+__all__ = [
+    "axis_size",
+    "cost_analysis_dict",
+    "shard_map",
+    "tree_flatten_with_path",
+]

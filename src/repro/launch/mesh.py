@@ -8,19 +8,29 @@ jax initialization).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+try:  # jax >= 0.5 exposes explicit axis types; older versions are all-Auto
+    from jax.sharding import AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    AxisType = None
+
+
+def _make_mesh(shape, axes):
+    if AxisType is not None:
+        return jax.make_mesh(
+            shape, axes, axis_types=(AxisType.Auto,) * len(axes)
+        )
+    # Older jax: make_mesh has no axis_types kwarg; meshes are implicitly
+    # Auto, which is exactly what the explicit call above requests.
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(shape, axes)
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / small runs."""
-    return jax.make_mesh(
-        tuple(shape), tuple(axes), axis_types=(AxisType.Auto,) * len(axes)
-    )
+    return _make_mesh(tuple(shape), tuple(axes))

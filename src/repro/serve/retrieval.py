@@ -1,17 +1,21 @@
 """Retrieval service: the paper's technique as a first-class serving feature.
 
 Pipeline:  encoder LM  ->  mean-pooled hidden state  ->  AQBC binarization
-           ->  AMIH exact angular KNN  (host index)  +  device-sharded
+           ->  exact angular KNN through the unified SearchEngine
+           (core.engine; backend selected by name)  +  device-sharded
            linear-scan reranker for pod-scale DBs (core.distributed).
 
 This is the production shape of the paper: binary hashing exists to make
 billion-item corpora searchable in RAM (paper §6.3.4); the LM zoo supplies
-the embeddings; AMIH supplies exact sublinear angular search over the codes.
+the embeddings; the engine supplies exact sublinear angular search over
+the codes, *batched* — queued queries are answered ``search_batch_size``
+at a time through one ``knn_batch`` call per step, the multi-index-hashing
+serving shape (probing-sequence sharing amortizes across the batch).
 
 ``RetrievalService.build_index`` ingests documents (token arrays), encodes,
-learns/applies AQBC, packs codes, builds the AMIH index. ``search`` encodes
-a query the same way and returns exact angular KNN (plus optionally the
-device scan used as a cross-check / distributed fallback).
+learns/applies AQBC, packs codes, builds the engine. ``search_batch``
+answers a batch of queries in one engine call; ``search`` is the B=1
+convenience; ``submit``/``run_queued`` expose the queued serving loop.
 """
 
 from __future__ import annotations
@@ -23,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import AMIHIndex, AMIHStats, linear_scan_knn, pack_bits
+from ..core import EngineStats, SearchEngine, linear_scan_knn, make_engine, pack_bits
 from ..core import aqbc
 from ..models import Model
 from ..models.common import ArchConfig
@@ -37,6 +41,9 @@ class RetrievalConfig:
     aqbc_iters: int = 15
     m_tables: Optional[int] = None    # None -> paper's p/log2(n)
     batch_size: int = 32              # encode batch
+    engine: str = "amih"              # core.engine backend name
+    verify_backend: str = "numpy"     # AMIH candidate verification
+    search_batch_size: int = 32       # queued queries per knn_batch step
 
 
 @dataclass
@@ -45,15 +52,23 @@ class RetrievalService:
     params: object
     rcfg: RetrievalConfig = field(default_factory=RetrievalConfig)
 
-    index: Optional[AMIHIndex] = None
+    engine: Optional[SearchEngine] = None
     rotation: Optional[jax.Array] = None
     db_words: Optional[np.ndarray] = None
     shift: Optional[np.ndarray] = None   # non-negativity shift, fit at build
+    _queue: List[Tuple[int, np.ndarray]] = field(default_factory=list)
+    _next_qid: int = 0
+    # jitted pooled-encoder forward, built once on first embed(): a fresh
+    # @jax.jit closure per call would retrace+recompile on every batched
+    # serving step (embed is the hot path of run_queued)
+    _pooled: Optional[object] = field(default=None, repr=False)
 
     # ------------------------------------------------------------ encoding
-    def embed(self, token_batches: np.ndarray) -> np.ndarray:
-        """(N, S) int32 tokens -> (N, d_model) float32 mean-pooled states."""
-        # A dedicated pooled forward (final-norm hidden states, not logits):
+    def _pooled_fn(self):
+        """The jitted pooled forward (final-norm hidden states, not
+        logits), built once and cached on the service."""
+        if self._pooled is not None:
+            return self._pooled
         from ..models import lm as lm_lib
 
         @jax.jit
@@ -78,6 +93,12 @@ class RetrievalService:
             h = apply_norm(h, self.params["final_norm"], self.cfg.norm)
             return h.mean(axis=1).astype(jnp.float32)
 
+        self._pooled = pooled
+        return pooled
+
+    def embed(self, token_batches: np.ndarray) -> np.ndarray:
+        """(N, S) int32 tokens -> (N, d_model) float32 mean-pooled states."""
+        pooled = self._pooled_fn()
         out = []
         B = self.rcfg.batch_size
         toks = np.asarray(token_batches, np.int32)
@@ -108,13 +129,20 @@ class RetrievalService:
         self.rotation = model.rotation
         bits = np.asarray(aqbc.encode(jnp.asarray(x), self.rotation))
         self.db_words = pack_bits(bits)
-        self.index = AMIHIndex.build(
-            self.db_words, self.rcfg.code_bits, m=self.rcfg.m_tables
+        cfg: Dict[str, object] = {}
+        if self.rcfg.engine == "amih":
+            cfg = {
+                "m": self.rcfg.m_tables,
+                "verify_backend": self.rcfg.verify_backend,
+            }
+        self.engine = make_engine(
+            self.rcfg.engine, self.db_words, self.rcfg.code_bits, **cfg
         )
+        index = getattr(self.engine, "index", None)
         return {
             "n_docs": float(len(doc_tokens)),
             "aqbc_objective": float(model.objective_trace[-1]),
-            "m_tables": float(self.index.m),
+            "m_tables": float(getattr(index, "m", 0)),
         }
 
     # -------------------------------------------------------------- search
@@ -126,15 +154,53 @@ class RetrievalService:
         bits = np.asarray(aqbc.encode(jnp.asarray(x), self.rotation))
         return pack_bits(bits)
 
-    def search(
+    def search_batch(
         self, query_tokens: np.ndarray, k: int = 10
-    ) -> Tuple[np.ndarray, np.ndarray, AMIHStats]:
-        """Exact angular KNN for one query. Returns (ids, sims, stats)."""
-        assert self.index is not None, "call build_index first"
-        q_words = self.encode_query(query_tokens)[0]
-        stats = AMIHStats()
-        ids, sims = self.index.knn(q_words, k, stats=stats)
-        return ids, sims, stats
+    ) -> Tuple[np.ndarray, np.ndarray, EngineStats]:
+        """Exact angular KNN for a batch of queries through one
+        ``knn_batch`` call. Returns (ids (B, k'), sims (B, k'), stats)."""
+        assert self.engine is not None, "call build_index first"
+        q_words = self.encode_query(query_tokens)
+        return self.engine.knn_batch(q_words, k)
+
+    def search(self, query_tokens: np.ndarray, k: int = 10):
+        """Single-query convenience over ``search_batch`` (B=1).
+
+        Returns (ids, sims, stats) where stats is the query's own counter
+        object (AMIHStats / SearchStats — every backend provides one).
+        """
+        ids, sims, stats = self.search_batch(
+            query_tokens[None, :] if query_tokens.ndim == 1 else query_tokens,
+            k,
+        )
+        return ids[0], sims[0], stats.per_query[0]
+
+    # ------------------------------------------------------ queued serving
+    def submit(self, query_tokens: np.ndarray) -> int:
+        """Enqueue a query for the next batched search step; returns qid."""
+        qid = self._next_qid
+        self._next_qid += 1
+        self._queue.append((qid, np.asarray(query_tokens)))
+        return qid
+
+    def run_queued(
+        self, k: int = 10
+    ) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
+        """Drain the queue, ``search_batch_size`` queries per knn_batch
+        step (the serving loop's batched shape). Returns qid -> (ids, sims).
+        """
+        out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        step = max(1, self.rcfg.search_batch_size)
+        while self._queue:
+            batch = self._queue[:step]
+            toks = np.stack([t for _, t in batch])
+            ids, sims, _ = self.search_batch(toks, k)
+            # pop only after the step succeeded, so a raise mid-drain
+            # leaves the unanswered queries queued for a retry
+            self._queue = self._queue[step:]
+            for row, (qid, _) in enumerate(batch):
+                out[qid] = (ids[row], sims[row])
+        return out
 
     def search_linear(self, query_tokens: np.ndarray, k: int = 10):
         """Exhaustive baseline over the same codes (cross-check)."""

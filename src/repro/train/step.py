@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from .. import jax_compat
 from ..models import Model, input_specs
 from ..models.common import ArchConfig, ShapeConfig
 from ..models.sharding import DEFAULT_RULES, Rules, sharding_context
@@ -301,7 +302,7 @@ def make_dp_compressed_train_step(
     if cfg.family == "encdec":
         batch_spec["enc_frames"] = P(dp_axes)
 
-    fn = jax.shard_map(
+    fn = jax_compat.shard_map(
         local_step,
         mesh=mesh,
         in_specs=(rep, rep, rep, batch_spec),

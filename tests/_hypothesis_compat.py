@@ -1,0 +1,125 @@
+"""Shim over ``hypothesis``: real library when installed, else a small
+deterministic fallback so the suite collects and runs without the optional
+dependency.
+
+The fallback implements exactly the API surface this repo's tests use:
+
+  - ``@given(**kwargs)`` with keyword strategies
+  - ``@settings(max_examples=..., deadline=...)`` (stacked under ``given``)
+  - ``st.integers(lo, hi)``, ``st.sampled_from(seq)``, ``st.data()`` with
+    ``data.draw(strategy)``
+
+Draws are deterministic per (test name, example index), so failures are
+reproducible; the drawn values are attached to the assertion message.
+``REPRO_MAX_EXAMPLES`` caps example counts for quick local runs.
+
+Install the real thing with the ``test`` extra (see pyproject.toml) to get
+shrinking and the full strategy library.
+"""
+
+from __future__ import annotations
+
+import os
+import zlib
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import numpy as np
+
+    class _Strategy:
+        def example(self, rng):  # pragma: no cover - interface
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def example(self, rng):
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, options):
+            self.options = list(options)
+
+        def example(self, rng):
+            return self.options[int(rng.integers(0, len(self.options)))]
+
+    class _DataStrategy(_Strategy):
+        def example(self, rng):
+            return _DataObject(rng)
+
+    class _DataObject:
+        """Interactive draws inside the test body (st.data())."""
+
+        def __init__(self, rng):
+            self._rng = rng
+
+        def draw(self, strategy, label=None):
+            return strategy.example(self._rng)
+
+    class _StrategiesModule:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+        @staticmethod
+        def data():
+            return _DataStrategy()
+
+    st = _StrategiesModule()
+
+    def settings(max_examples: int = 100, deadline=None, **_ignored):
+        def deco(fn):
+            fn._compat_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            inner = fn
+            max_examples = getattr(inner, "_compat_max_examples", 100)
+            cap = os.environ.get("REPRO_MAX_EXAMPLES")
+            if cap:
+                max_examples = min(max_examples, int(cap))
+            base_seed = zlib.crc32(
+                getattr(inner, "__qualname__", inner.__name__).encode()
+            )
+
+            def wrapper(*args, **kwargs):
+                for i in range(max_examples):
+                    rng = np.random.default_rng([base_seed, i])
+                    drawn = {
+                        name: strat.example(rng)
+                        for name, strat in strategies.items()
+                    }
+                    try:
+                        inner(*args, **kwargs, **drawn)
+                    except Exception as e:  # annotate the failing example
+                        shown = {
+                            k: v
+                            for k, v in drawn.items()
+                            if not isinstance(v, _DataObject)
+                        }
+                        raise AssertionError(
+                            f"falsifying example #{i}: {shown}"
+                        ) from e
+
+            wrapper.__name__ = inner.__name__
+            wrapper.__qualname__ = getattr(
+                inner, "__qualname__", inner.__name__
+            )
+            wrapper.__doc__ = inner.__doc__
+            wrapper.__module__ = inner.__module__
+            return wrapper
+
+        return deco

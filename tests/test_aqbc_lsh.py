@@ -52,11 +52,18 @@ def test_aqbc_preserves_neighborhoods():
     jj = rng.integers(0, 600, 400)
     real = (xn[ii] * xn[jj]).sum(1)
     code = (bn[ii] * bn[jj]).sum(1)
-    # rank correlation must be clearly positive
-    from numpy import argsort
-
-    rr = np.corrcoef(argsort(argsort(real)), argsort(argsort(code)))[0, 1]
+    # Code sims are heavily quantized (clustered points share codes, so
+    # only ~tens of distinct values over 400 pairs) — a rank correlation
+    # collapses under those ties. Pearson on the raw sims is the
+    # tie-robust version of the same claim, and must be clearly positive.
+    rr = np.corrcoef(real, code)[0, 1]
     assert rr > 0.5, rr
+    # And the ordering claim directly: angularly-near pairs get closer
+    # codes than far pairs on average, with a real margin.
+    near, far = real >= np.quantile(real, 0.75), real <= np.quantile(real, 0.25)
+    assert code[near].mean() > code[far].mean() + 0.1, (
+        code[near].mean(), code[far].mean()
+    )
 
 
 def test_lsh_recall_increases_with_probes():

@@ -1,0 +1,196 @@
+"""The unified SearchEngine contract: every backend's ``knn_batch`` is
+exact — bit-identical sims to per-query ``linear_scan_knn`` — across batch
+sizes, code lengths, degenerate queries, and the fell-back-to-scan path;
+stats objects aggregate per query."""
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import (
+    AMIHIndex,
+    AMIHStats,
+    EngineStats,
+    available_backends,
+    linear_scan_knn,
+    make_engine,
+    pack_bits,
+)
+from repro.core.linear_scan import sims_against_db
+from repro.data import synthetic_binary_codes, synthetic_queries
+
+
+def _backends_for(p):
+    return [b for b in available_backends() if b != "single_table" or p <= 64]
+
+
+def _check_batch_exact(ids, sims, qs, db, k_eff):
+    """Exactness up to ties: sims rows bit-identical to linear scan, and
+    every returned id carries its true sim."""
+    B = qs.shape[0]
+    assert ids.shape == (B, k_eff) and sims.shape == (B, k_eff)
+    for i in range(B):
+        _, sims_l = linear_scan_knn(qs[i], db, k_eff)
+        np.testing.assert_array_equal(sims[i], sims_l)
+        all_sims = sims_against_db(qs[i], db)
+        np.testing.assert_array_equal(all_sims[ids[i]], sims[i])
+
+
+def test_registry_and_unknown_backend():
+    assert {"amih", "linear_scan", "single_table"} <= set(available_backends())
+    db = pack_bits(np.zeros((4, 16), np.uint8))
+    with pytest.raises(ValueError, match="unknown search backend"):
+        make_engine("nope", db, 16)
+
+
+@given(
+    p=st.sampled_from([32, 64, 128]),
+    B=st.sampled_from([1, 8, 64]),
+    n=st.integers(20, 300),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=12, deadline=None)
+def test_knn_batch_exact_all_backends(p, B, n, k, seed):
+    db_bits = synthetic_binary_codes(n, p, seed=seed)
+    q_bits = synthetic_queries(db_bits, B, seed=seed + 1)
+    db, qs = pack_bits(db_bits), pack_bits(q_bits)
+    k_eff = min(k, n)
+    for backend in _backends_for(p):
+        eng = make_engine(backend, db, p)
+        ids, sims, stats = eng.knn_batch(qs, k)
+        _check_batch_exact(ids, sims, qs, db, k_eff)
+        assert isinstance(stats, EngineStats)
+        assert stats.backend == backend and stats.queries == B
+        assert len(stats.per_query) == B
+
+
+def test_linear_scan_backend_bit_identical_ids():
+    p, n, B, k = 64, 250, 16, 9
+    db_bits = synthetic_binary_codes(n, p, seed=5)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=6))
+    db = pack_bits(db_bits)
+    eng = make_engine("linear_scan", db, p)
+    ids, sims, _ = eng.knn_batch(qs, k)
+    for i in range(B):
+        ids_l, sims_l = linear_scan_knn(qs[i], db, k)
+        np.testing.assert_array_equal(ids[i], ids_l)
+        np.testing.assert_array_equal(sims[i], sims_l)
+
+
+def test_zero_norm_queries_in_batch():
+    p, n = 64, 120
+    db_bits = synthetic_binary_codes(n, p, seed=7)
+    qs = pack_bits(synthetic_queries(db_bits, 4, seed=8))
+    qs[1] = 0  # zero-norm query amid normal ones
+    db = pack_bits(db_bits)
+    for backend in _backends_for(p):
+        eng = make_engine(backend, db, p)
+        ids, sims, _ = eng.knn_batch(qs, 5)
+        _check_batch_exact(ids, sims, qs, db, 5)
+        assert np.all(sims[1] == 0.0)
+
+
+def test_single_query_1d_promotes_to_batch():
+    p, n = 32, 60
+    db_bits = synthetic_binary_codes(n, p, seed=9)
+    q = pack_bits(synthetic_queries(db_bits, 1, seed=10)[0])
+    db = pack_bits(db_bits)
+    for backend in _backends_for(p):
+        ids, sims, stats = make_engine(backend, db, p).knn_batch(q, 3)
+        assert ids.shape == (1, 3) and stats.queries == 1
+
+
+def test_k_larger_than_n_clamps():
+    p, n = 32, 15
+    db_bits = synthetic_binary_codes(n, p, seed=11)
+    qs = pack_bits(synthetic_queries(db_bits, 3, seed=12))
+    db = pack_bits(db_bits)
+    for backend in _backends_for(p):
+        ids, sims, _ = make_engine(backend, db, p).knn_batch(qs, 99)
+        assert ids.shape == (3, n)
+        _check_batch_exact(ids, sims, qs, db, n)
+
+
+def test_amih_fell_back_to_scan_path_is_exact():
+    # m=1 on wide sparse codes forces huge per-table enumerations; a tiny
+    # cap triggers the degrade-to-verification guard. Still exact.
+    p, n = 64, 80
+    rng = np.random.default_rng(13)
+    db = pack_bits((rng.random((n, p)) < 0.5).astype(np.uint8))
+    qs = pack_bits((rng.random((4, p)) < 0.5).astype(np.uint8))
+    eng = make_engine("amih", db, p, m=1, enumeration_cap=10)
+    ids, sims, stats = eng.knn_batch(qs, 10)
+    _check_batch_exact(ids, sims, qs, db, 10)
+    assert stats.total("fell_back_to_scan") == 4
+    assert all(s.fell_back_to_scan for s in stats.per_query)
+
+
+def test_single_table_fell_back_to_scan_path_is_exact():
+    # Sparse occupancy at p=64: bucket enumeration blows past the cap and
+    # the engine degrades the query to an exact linear scan.
+    p, n = 64, 100
+    rng = np.random.default_rng(14)
+    db = pack_bits((rng.random((n, p)) < 0.5).astype(np.uint8))
+    qs = pack_bits((rng.random((3, p)) < 0.5).astype(np.uint8))
+    eng = make_engine("single_table", db, p)
+    ids, sims, stats = eng.knn_batch(qs, 8)
+    _check_batch_exact(ids, sims, qs, db, 8)
+    assert stats.total("fell_back_to_scan") >= 1
+
+
+def test_amih_pallas_verification_matches_numpy():
+    p, n, B, k = 96, 150, 6, 7
+    db_bits = synthetic_binary_codes(n, p, seed=15)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=16))
+    db = pack_bits(db_bits)
+    eng_np = make_engine("amih", db, p, verify_backend="numpy")
+    eng_pl = make_engine("amih", db, p, verify_backend="pallas")
+    ids_n, sims_n, st_n = eng_np.knn_batch(qs, k)
+    ids_p, sims_p, st_p = eng_pl.knn_batch(qs, k)
+    np.testing.assert_array_equal(ids_n, ids_p)
+    np.testing.assert_array_equal(sims_n, sims_p)
+    # identical probing work either way — only the verifier differs
+    assert st_n.aggregate() == st_p.aggregate()
+
+
+def test_amih_stats_aggregate_per_query():
+    p, n, B = 64, 400, 12
+    db_bits = synthetic_binary_codes(n, p, seed=17)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=18))
+    db = pack_bits(db_bits)
+    eng = make_engine("amih", db, p)
+    _, _, stats = eng.knn_batch(qs, 10)
+    assert all(isinstance(s, AMIHStats) for s in stats.per_query)
+    agg = stats.aggregate()
+    for counter in ("probes", "retrieved", "verified", "tuples_processed"):
+        assert agg[counter] == sum(
+            getattr(s, counter) for s in stats.per_query
+        )
+    assert agg["probes"] > 0 and agg["verified"] > 0
+    # batched counters match the per-query algorithm exactly
+    for i in range(B):
+        st = AMIHStats()
+        eng.index.knn(qs[i], 10, stats=st)
+        assert st == stats.per_query[i]
+
+
+def test_batch_matches_per_query_amih_ids():
+    p, n, B, k = 128, 350, 24, 6
+    db_bits = synthetic_binary_codes(n, p, seed=19)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=20))
+    db = pack_bits(db_bits)
+    idx = AMIHIndex.build(db, p)
+    ids_b, sims_b = idx.knn_batch(qs, k)
+    for i in range(B):
+        ids_1, sims_1 = idx.knn(qs[i], k)
+        np.testing.assert_array_equal(ids_b[i], ids_1)
+        np.testing.assert_array_equal(sims_b[i], sims_1)
+
+
+def test_bad_query_shape_raises():
+    p = 64
+    db = pack_bits(np.zeros((10, p), np.uint8))
+    eng = make_engine("amih", db, p)
+    with pytest.raises(ValueError, match="packed words"):
+        eng.knn_batch(np.zeros((4, 7), np.uint32), 3)

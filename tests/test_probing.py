@@ -1,7 +1,7 @@
 """Property tests for the probing-sequence generator (paper RQ1, Props 1-3)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.probing import (
     closed_form_prefix,

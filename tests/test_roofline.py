@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.jax_compat import cost_analysis_dict as _xla_cost_analysis
 from repro.roofline import analyze, model_flops, parse_hlo_costs
 from repro.roofline.hlo_parse import _parse_op_line, _shape_bytes
 
@@ -46,7 +47,7 @@ def test_parser_matches_cost_analysis_scanfree():
     b = jnp.zeros((256, 512), jnp.float32)
     c = jnp.zeros((512, 64), jnp.float32)
     compiled = jax.jit(f).lower(a, b, c).compile()
-    ca = compiled.cost_analysis()
+    ca = _xla_cost_analysis(compiled)
     costs = parse_hlo_costs(compiled.as_text())
     want_flops = 2 * 128 * 256 * 512 + 2 * 128 * 512 * 64
     assert costs.flops == pytest.approx(want_flops, rel=0.01)
@@ -69,7 +70,7 @@ def test_parser_scales_scan_bodies_by_trip_count():
     assert costs.flops == pytest.approx(want, rel=0.01)
     assert 17 in costs.trip_counts
     # XLA's own counter misses the scaling (this is WHY the parser exists)
-    ca = compiled.cost_analysis()
+    ca = _xla_cost_analysis(compiled)
     assert ca["flops"] < want / 2
 
 
@@ -109,7 +110,8 @@ def test_parser_counts_collectives():
         mesh = jax.make_mesh((8,), ("d",))
         def f(x):
             return jax.lax.psum(x, "d")
-        fn = jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
+        from repro.jax_compat import shard_map
+        fn = shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P())
         x = jax.ShapeDtypeStruct((800, 4), jnp.float32)
         compiled = jax.jit(fn).lower(x).compile()
         costs = parse_hlo_costs(compiled.as_text())

@@ -3,7 +3,7 @@ identical to linear scan for the angular KNN problem (up to ties)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (
     AMIHIndex,
