@@ -45,13 +45,17 @@ from repro.core import make_engine
 BENCH_JSON = os.path.join(_ROOT, "BENCH_engine.json")
 
 
-REPEATS = 2  # best-of; host timing at sub-ms/query is noisy
+REPEATS = 3  # best-of; host timing at sub-ms/query is noisy, and a
+             # single transient (GC, scheduler) can poison a 2-sample min
 
 
 def _time_batched(engine, qs, k, batch):
     """Best-of-REPEATS wall seconds + aggregated stats for all queries,
-    batch at a time (first repeat warms caches, as serving would)."""
+    batch at a time (first repeat warms caches, as serving would).
+    ``verify_launches`` is per-sweep (one pass over all queries)."""
     best, totals = float("inf"), {}
+    index = getattr(engine, "index", None)
+    launches0 = getattr(index, "verify_launches", 0)
     for _ in range(REPEATS):
         t0 = time.perf_counter()
         totals = {"probes": 0, "verified": 0, "fell_back_to_scan": 0}
@@ -61,6 +65,8 @@ def _time_batched(engine, qs, k, batch):
             for key in totals:
                 totals[key] += agg.get(key, 0)
         best = min(best, time.perf_counter() - t0)
+    launches = getattr(index, "verify_launches", 0) - launches0
+    totals["verify_launches"] = launches // REPEATS
     return best, totals
 
 
@@ -79,9 +85,14 @@ def _time_seed_loop(index, qs, k):
 
 
 def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
-        ps=(64, 128), ks=(1, 10, 100)):
+        ps=(64, 128), ks=(1, 10, 100), out_json: str | None = None,
+        sizes=None, csv_name: str = "amih_vs_scan.csv"):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
-    sizes = [n for n in (10_000, 100_000, 1_000_000, 10_000_000) if n <= max_n]
+    if sizes is None:
+        sizes = [n for n in (10_000, 100_000, 1_000_000, 10_000_000)
+                 if n <= max_n]
+    else:  # explicit sizes (bench_check retries a narrowed workload)
+        sizes = [n for n in sizes if n <= max_n]
     rows = []
     for p in ps:
         for n in sizes:
@@ -105,6 +116,7 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                         "qps": round(nq / max(t_amih, 1e-9), 2),
                         "probes": totals["probes"],
                         "verified": totals["verified"],
+                        "verify_launches": totals["verify_launches"],
                         "fell_back_to_scan": totals["fell_back_to_scan"],
                         "seed_loop_ms_per_query":
                             round(1e3 * t_seed / nq, 4),
@@ -130,6 +142,7 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                     "ms_per_query": round(1e3 * t_scan / nq, 4),
                     "qps": round(nq / max(t_scan, 1e-9), 2),
                     "probes": 0, "verified": n * nq,
+                    "verify_launches": 0,
                     "fell_back_to_scan": 0,
                     "seed_loop_ms_per_query": "",
                     "speedup_vs_seed_loop": "",
@@ -137,7 +150,7 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                     "speedup_vs_scan": 1.0,
                     "index_build_s": 0.0,
                 })
-    path = write_csv("amih_vs_scan.csv", rows)
+    path = write_csv(csv_name, rows)
     payload = {
         "bench": "engine",
         "workload": {
@@ -147,10 +160,11 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
         },
         "rows": rows,
     }
-    with open(BENCH_JSON, "w") as f:
+    out_json = out_json or BENCH_JSON
+    with open(out_json, "w") as f:
         json.dump(payload, f, indent=1)
     print(f"wrote {path}")
-    print(f"wrote {BENCH_JSON}")
+    print(f"wrote {out_json}")
     return rows
 
 
@@ -170,10 +184,13 @@ def _parse_args(argv=None):
     ap.add_argument("--nq", type=int, default=64, help="queries per cell")
     ap.add_argument("--p", type=int, nargs="+", default=[64, 128])
     ap.add_argument("--k", type=int, nargs="+", default=[1, 10, 100])
+    ap.add_argument("--out", type=str, default=None,
+                    help="write the JSON payload here instead of "
+                         "BENCH_engine.json (used by scripts/bench_check)")
     return ap.parse_args(argv)
 
 
 if __name__ == "__main__":
     a = _parse_args()
     run(max_n=a.max_n, nq=a.nq, batches=tuple(sorted(set(a.batch))),
-        ps=tuple(a.p), ks=tuple(a.k))
+        ps=tuple(a.p), ks=tuple(a.k), out_json=a.out)

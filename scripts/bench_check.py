@@ -1,0 +1,145 @@
+#!/usr/bin/env python
+"""Perf-regression gate: re-run the engine benchmark and diff it against
+the committed BENCH_engine.json.
+
+A fresh ``bench_amih_vs_scan`` sweep (same workload parameters as the
+committed baseline, restricted to the requested batch sizes) is compared
+cell-by-cell: for every AMIH (p, n, K, batch) cell present in both runs,
+fail if fresh throughput regressed by more than ``--threshold`` (default
+25% on ms_per_query). Host timing is noisy, so single-cell blips on a
+loaded machine are possible — the gate is opt-in (wired into
+scripts/verify.sh behind REPRO_BENCH_CHECK=1), not part of tier-1.
+
+Usage:
+  PYTHONPATH=src python scripts/bench_check.py             # batch=64 gate
+  PYTHONPATH=src python scripts/bench_check.py --max-n 10000   # smoke
+  REPRO_BENCH_CHECK=1 scripts/verify.sh                    # tests + gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "benchmarks"))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+BASELINE_JSON = os.path.join(_ROOT, "BENCH_engine.json")
+
+
+def _cells(payload, batches, max_n):
+    out = {}
+    for row in payload["rows"]:
+        if row["backend"] != "amih":
+            continue
+        if row["batch"] not in batches or row["n"] > max_n:
+            continue
+        out[(row["p"], row["n"], row["K"], row["batch"])] = float(
+            row["ms_per_query"]
+        )
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--batch", type=int, nargs="+", default=[64],
+                    help="batch sizes to re-run and gate on")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated ms_per_query regression (0.25=25%%)")
+    ap.add_argument("--max-n", type=int, default=None,
+                    help="cap DB sizes (smoke mode); default: every size "
+                         "in the committed baseline")
+    ap.add_argument("--baseline", type=str, default=BASELINE_JSON)
+    args = ap.parse_args(argv)
+
+    if not os.path.exists(args.baseline):
+        print(f"bench_check: no baseline at {args.baseline}; nothing to "
+              f"gate against (run benchmarks/bench_amih_vs_scan.py first)")
+        return 0
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    wl = baseline["workload"]
+    max_n = args.max_n or max(wl["sizes"])
+
+    import bench_amih_vs_scan as bench
+
+    def fresh_sweep(ps, ks, sweep_max_n, sizes=None):
+        """One bench sweep into a throwaway JSON/CSV (the committed
+        BENCH_engine.json and full-sweep CSV stay untouched)."""
+        with tempfile.NamedTemporaryFile(
+            mode="r", suffix=".json", prefix="bench_check_", delete=False
+        ) as tmp:
+            fresh_path = tmp.name
+        try:
+            bench.run(
+                max_n=sweep_max_n,
+                nq=wl["queries"],
+                batches=tuple(sorted(set(args.batch))),
+                ps=tuple(ps),
+                ks=tuple(ks),
+                out_json=fresh_path,
+                sizes=sizes,
+                csv_name="amih_vs_scan_check.csv",
+            )
+            with open(fresh_path) as f:
+                return _cells(json.load(f), set(args.batch), sweep_max_n)
+        finally:
+            os.unlink(fresh_path)
+
+    base_cells = _cells(baseline, set(args.batch), max_n)
+    fresh_cells = fresh_sweep(wl["ps"], wl["ks"], max_n)
+    shared = sorted(set(base_cells) & set(fresh_cells))
+    if not shared:
+        print("bench_check: no comparable AMIH cells between baseline and "
+              "fresh run (workloads disjoint?)")
+        return 2
+
+    def regressed(cells):
+        return [
+            c for c in cells
+            if fresh_cells[c] / max(base_cells[c], 1e-9)
+            > 1.0 + args.threshold
+        ]
+
+    failures = regressed(shared)
+    if failures:
+        # one retry of just the failing cells: a single scheduler/GC
+        # transient on a loaded host shouldn't fail the gate. Keep the
+        # per-cell best of both sweeps.
+        print(f"bench_check: {len(failures)} cell(s) over threshold; "
+              f"re-measuring once to rule out host noise...")
+        retry = fresh_sweep(
+            sorted({c[0] for c in failures}),
+            sorted({c[2] for c in failures}),
+            max(c[1] for c in failures),
+            sizes=sorted({c[1] for c in failures}),
+        )
+        for cell, ms in retry.items():
+            if cell in fresh_cells:
+                fresh_cells[cell] = min(fresh_cells[cell], ms)
+        failures = regressed(shared)
+
+    for cell in shared:
+        base_ms, fresh_ms = base_cells[cell], fresh_cells[cell]
+        ratio = fresh_ms / max(base_ms, 1e-9)
+        status = "FAIL" if cell in failures else "ok"
+        p, n, K, batch = cell
+        print(f"  [{status}] p={p} n={n:>9} K={K:>3} B={batch:>3} "
+              f"baseline={base_ms:.3f} fresh={fresh_ms:.3f} ms/q "
+              f"({ratio:.2f}x)")
+    if failures:
+        print(f"bench_check: {len(failures)}/{len(shared)} AMIH cells "
+              f"regressed beyond {args.threshold:.0%}")
+        return 1
+    print(f"bench_check: all {len(shared)} AMIH cells within "
+          f"{args.threshold:.0%} of the committed baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

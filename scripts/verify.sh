@@ -1,7 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 verification: the one command run locally and in CI.
 # Usage: scripts/verify.sh [extra pytest args...]
+# Opt-in perf gate: REPRO_BENCH_CHECK=1 scripts/verify.sh
+#   (smoke-diffs a fresh bench_amih_vs_scan run against the committed
+#    BENCH_engine.json via scripts/bench_check.py after the tests pass)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+if [[ "${REPRO_BENCH_CHECK:-0}" == "1" ]]; then
+  python scripts/bench_check.py --max-n "${REPRO_BENCH_CHECK_MAX_N:-10000}"
+fi

@@ -19,11 +19,31 @@ candidate verifications are the two cost terms.
 Batched queries (``knn_batch``) follow the multi-index-hashing serving
 shape: queries with identical ``(p, z)`` share one probing-sequence
 enumeration (the heap + exact-rational ordering is per-*group*, not
-per-query), advance in lockstep over full-code tuples, and verify their
-candidate blocks through a pluggable backend — vectorized NumPy popcounts
-or the Pallas ``verify_tuples`` kernel (``verify_backend="pallas"``), which
-gathers the candidate codes, pads to the kernel block size, and masks the
-padding (see kernels/ops.verify_tuples_op).
+per-query) and advance in lockstep over full-code tuples. Each tuple step
+is a probe -> verify -> bucket -> emit pipeline:
+
+  1. probe: every active query runs its outstanding substring-tuple
+     probes (host, per-query — the tables are host CSR structures) and
+     collects its *fresh* candidate ids;
+  2. verify: the whole z-group is verified in ONE call. With
+     ``verify_backend="numpy"`` that is a single vectorized popcount over
+     the concatenated blocks; with ``verify_backend="pallas"`` the blocks
+     become a padded ``(B_g, C_max, W)`` device layout (power-of-two
+     padding buckets keep the jit cache bounded) and one
+     ``verify_tuples_grouped`` launch per (z-group, tuple-step) returns
+     packed bucket keys ``r10 * (p + 1) + r01`` — candidate rows are
+     gathered on device from the resident copy of ``db_words`` uploaded
+     once at build, so only the (B_g, C_max) index/key matrices cross the
+     host-device boundary (see kernels/ops.verify_tuples_grouped_op);
+  3. bucket: keys are grouped by one stable argsort per query (no
+     ``np.unique(axis=0)`` on the hot path) into the pending dict;
+  4. emit: codes whose bucket equals the current tuple are appended in
+     ascending-id order at the host float64 ``sim_value`` — emission sims
+     never round-trip through float32, keeping results bit-identical to
+     ``linear_scan_knn``.
+
+``verify_launches`` on the index counts grouped verification dispatches
+(one per (z-group, tuple-step) unless a block exceeds the element budget).
 """
 
 from __future__ import annotations
@@ -47,9 +67,7 @@ from .tuples import rhat, sim_value
 
 __all__ = ["AMIHIndex", "AMIHStats", "default_num_tables"]
 
-# Sentinel stored in the per-query ``probed`` set once the query has
-# degraded to full verification (every id seen) — no more probing needed.
-_SCANNED = ("__scanned__",)
+_EMPTY_IDS = np.empty(0, dtype=np.int64)
 
 
 def default_num_tables(p: int, n: int) -> int:
@@ -107,18 +125,27 @@ class _SubTable:
 
 @dataclass
 class _QueryState:
-    """Per-query probing state inside a batched search."""
+    """Per-query probing state inside a batched search.
+
+    ``cover[s]`` maps substring-tuple weight ``a`` to the largest ``b``
+    already probed in table ``s``. Probes for one (s, a) always extend a
+    contiguous prefix b = 0..bmax, so the max-b staircase is a lossless
+    (and O(1)-membership) replacement for the old probed-(s, a, b) set.
+    ``scanned`` marks a query degraded to full verification (every id
+    seen) — no more probing needed.
+    """
 
     qi: int                       # row in the query batch
     q_words: np.ndarray
     q_subs: List[int]
     z_subs: List[int]
     seen: np.ndarray
-    probed: set
+    cover: List[Dict[int, int]]
     pending: Dict[Tuple[int, int], List[np.ndarray]]
     out_ids: List[int]
     out_sims: List[float]
     stats: Optional[AMIHStats]
+    scanned: bool = False
     done: bool = False
 
 
@@ -130,16 +157,32 @@ class AMIHIndex:
     m: int
     db_words: np.ndarray = field(repr=False)   # (n, W) uint32 — for verification
     tables: List[_SubTable] = field(repr=False, default_factory=list)
-    # Candidate-verification backend: "numpy" (vectorized popcounts on host)
-    # or "pallas" (kernels/verify_tuples via ops.verify_tuples_op — native
-    # on TPU, interpret-mode elsewhere). Both are exact.
+    # Candidate-verification backend: "numpy" (one vectorized host popcount
+    # per z-group and tuple step) or "pallas" (one verify_tuples_grouped
+    # launch per z-group and tuple step — native on TPU, interpret-mode
+    # elsewhere). Both are exact.
     verify_backend: str = "numpy"
+    # Grouped verification dispatches so far (one per (z-group, tuple-step)
+    # with fresh candidates, unless a step exceeds verify_elem_budget and
+    # is chunked). Benchmarks/tests assert launch economy through this.
+    verify_launches: int = 0
+    # Cap on padded gather elements (B_g_pad * C_max_pad * W words) per
+    # device launch; oversized steps (e.g. a fell-back-to-scan query whose
+    # block is the whole DB) are split across launches instead of
+    # materializing an unbounded (B_g, C_max, W) buffer.
+    verify_elem_budget: int = 1 << 24
     # Materialized probing-sequence prefixes keyed by query popcount z:
     # the heap + exact-rational tuple ordering is query-independent given
     # (p, z), so it is enumerated once per z across all queries and
     # batches. Total memory is bounded by (z+1)(p-z+1) tuples per z.
     _probing_cache: Dict[int, Tuple[List[Tuple[int, int]], Iterator]] = field(
         default_factory=dict, repr=False, compare=False
+    )
+    # Device-resident copy of db_words: uploaded once (eagerly at build for
+    # verify_backend="pallas", lazily otherwise) so grouped verification
+    # gathers candidate rows on device instead of re-shipping them per call.
+    _db_dev: Optional[object] = field(
+        default=None, repr=False, compare=False
     )
 
     # ------------------------------------------------------------- build
@@ -174,14 +217,26 @@ class AMIHIndex:
                     sorted_ids=np.arange(n, dtype=np.int64)[order],
                 )
             )
-        return cls(
+        index = cls(
             p=p, m=m, db_words=db_words, tables=tables,
             verify_backend=verify_backend,
         )
+        if verify_backend == "pallas":
+            index.db_dev  # upload once, at build time
+        return index
 
     @property
     def n(self) -> int:
         return self.db_words.shape[0]
+
+    @property
+    def db_dev(self):
+        """Device-resident (n, W) codes (uploaded on first access)."""
+        if self._db_dev is None:
+            import jax.numpy as jnp
+
+            self._db_dev = jnp.asarray(self.db_words)
+        return self._db_dev
 
     # ------------------------------------------------------------- search
     def knn(
@@ -189,7 +244,7 @@ class AMIHIndex:
         q_words: np.ndarray,
         k: int,
         stats: Optional[AMIHStats] = None,
-        enumeration_cap: Optional[int] = 2_000_000,
+        enumeration_cap: Optional[int] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact angular K nearest neighbors of a packed query.
 
@@ -209,15 +264,18 @@ class AMIHIndex:
         q_words: np.ndarray,
         k: int,
         stats: Optional[List[AMIHStats]] = None,
-        enumeration_cap: Optional[int] = 2_000_000,
+        enumeration_cap: Optional[int] = None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact angular KNN for a batch of packed queries: (B, W) -> ids,
         sims each (B, min(k, n)).
 
         Queries with equal popcount z share one probing-sequence
-        enumeration and advance in lockstep; each keeps its own dedup
-        bitmap / probed set / pending buckets, so per-query results and
-        counters are identical to ``knn`` run query-by-query.
+        enumeration and advance in lockstep through the probe ->
+        grouped-verify -> bucket -> emit pipeline (one verification call
+        per z-group and tuple step, see module docstring); each query
+        keeps its own dedup bitmap / probe-cover staircase / pending
+        buckets, so per-query results and counters are identical to
+        ``knn`` run query-by-query.
         """
         q_words = np.ascontiguousarray(
             np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
@@ -244,16 +302,28 @@ class AMIHIndex:
                 if not active:
                     break
                 s_val = sim_value(self.p, z, r1, r2)
+                # 1. probe: per-query table lookups -> fresh candidate ids
+                fresh_states: List[_QueryState] = []
+                fresh_blocks: List[np.ndarray] = []
                 for s in active:
                     if s.stats is not None:
                         s.stats.tuples_processed += 1
                         s.stats.max_radius = max(s.stats.max_radius, r1 + r2)
                         if r1 + r2 > r_hat:
                             s.stats.exceeded_rhat = True
-                    self._probe_for_tuple(
-                        s.q_words, r1, r2, s.q_subs, s.z_subs, s.probed,
-                        s.seen, s.pending, s.stats, enumeration_cap,
+                    fresh = self._probe_tables_for_tuple(
+                        s, r1, r2, enumeration_cap
                     )
+                    if fresh.size:
+                        if s.stats is not None:
+                            s.stats.verified += fresh.size
+                        fresh_states.append(s)
+                        fresh_blocks.append(fresh)
+                # 2+3. verify the whole z-group in one call and bucket
+                if fresh_blocks:
+                    self._verify_and_bucket(fresh_states, fresh_blocks)
+                # 4. emit this tuple's bucket per query
+                for s in active:
                     hits = s.pending.pop((r1, r2), None)
                     if hits:
                         ids = np.sort(np.concatenate(hits))
@@ -302,7 +372,7 @@ class AMIHIndex:
             q_subs=q_subs,
             z_subs=[int(v).bit_count() for v in q_subs],
             seen=np.zeros(self.n, dtype=bool),
-            probed=set(),
+            cover=[{} for _ in self.tables],
             pending={},
             out_ids=[],
             out_sims=[],
@@ -315,25 +385,21 @@ class AMIHIndex:
         r1: int,
         r2: int,
         stats: Optional[AMIHStats] = None,
-        enumeration_cap: Optional[int] = 2_000_000,
+        enumeration_cap: Optional[int] = None,
     ) -> np.ndarray:
         """The (r1, r2)-near neighbor problem (Def. 4): all codes with
         Hamming tuple <= (r1, r2) componentwise. Returns sorted ids."""
         q_words = np.asarray(q_words, dtype=WORD_DTYPE)
-        q_subs = [
-            int(extract_substring(q_words[None, :], t.lo, t.hi)[0])
-            for t in self.tables
-        ]
-        z_subs = [int(v).bit_count() for v in q_subs]
-        seen = np.zeros(self.n, dtype=bool)
-        pending: Dict[Tuple[int, int], List[np.ndarray]] = {}
-        self._probe_for_tuple(
-            q_words, r1, r2, q_subs, z_subs, set(), seen, pending, stats,
-            enumeration_cap,
-        )
+        state = self._make_state(q_words, 0, None)
+        state.stats = stats
+        fresh = self._probe_tables_for_tuple(state, r1, r2, enumeration_cap)
+        if fresh.size:
+            if stats is not None:
+                stats.verified += fresh.size
+            self._verify_and_bucket([state], [fresh])
         matches = [
             np.concatenate(v)
-            for (e1, e2), v in pending.items()
+            for (e1, e2), v in state.pending.items()
             if e1 <= r1 and e2 <= r2
         ]
         if not matches:
@@ -341,103 +407,211 @@ class AMIHIndex:
         return np.sort(np.concatenate(matches))
 
     # ------------------------------------------------------------ private
-    def _probe_for_tuple(
+    def _probe_tables_for_tuple(
         self,
-        q_words: np.ndarray,
+        state: _QueryState,
         r1: int,
         r2: int,
-        q_subs: List[int],
-        z_subs: List[int],
-        probed: set,
-        seen: np.ndarray,
-        pending: Dict[Tuple[int, int], List[np.ndarray]],
-        stats: Optional[AMIHStats],
         enumeration_cap: Optional[int],
-    ) -> None:
-        """Run all not-yet-done probes required by T_{r1,r2,m} (Prop. 4),
-        verify new candidates, and bucket them by exact full tuple.
+    ) -> np.ndarray:
+        """Run all not-yet-done probes required by T_{r1,r2,m} (Prop. 4)
+        for one query; return its fresh (never-seen) candidate ids.
 
-        Cost guard: if a single substring-tuple enumeration would probe more
-        buckets than there are stored codes (or than ``enumeration_cap``),
-        bucket probing has lost to exhaustive verification — we verify every
-        not-yet-seen code instead (exact; the paper's §5 observation that
-        "linear scan is a faster alternative" past that point). The
-        ``_SCANNED`` sentinel in ``probed`` short-circuits later tuples.
+        Probing only — verification happens once per z-group in
+        ``_verify_and_bucket``. The per-table ``cover`` staircase (max b
+        probed per a) makes the already-probed check O(tables * rsub)
+        instead of re-enumerating and set-filtering every (s, a, b) combo
+        per tuple step.
+
+        Cost guard: if a single substring-tuple enumeration would probe
+        more buckets than there are stored codes (or than
+        ``enumeration_cap``), bucket probing has lost to exhaustive
+        verification — every not-yet-seen code becomes a candidate instead
+        (exact; the paper's §5 observation that "linear scan is a faster
+        alternative" past that point) and ``state.scanned``
+        short-circuits later tuples.
         """
-        if _SCANNED in probed:
-            return
+        if state.scanned:
+            return _EMPTY_IDS
         rsub = (r1 + r2) // self.m
+        if enumeration_cap is None:
+            # same n-scaled default as the engine layer: max(8n, 16384)
+            enumeration_cap = max(8 * self.n, 1 << 14)
+        cap = min(enumeration_cap, max(self.n, 1))
+        stats = state.stats
+        z_subs = state.z_subs
         new_ids: List[np.ndarray] = []
-        todo = [
-            (s, a, b)
-            for s, table in enumerate(self.tables)
-            for a in range(min(r1, z_subs[s], rsub) + 1)
-            for b in range(min(r2, table.width - z_subs[s], rsub - a) + 1)
-            if (s, a, b) not in probed
-        ]
-        for (s, a, b) in todo:
-            probed.add((s, a, b))
-            table = self.tables[s]
+        for s, table in enumerate(self.tables):
             w_s, z_s = table.width, z_subs[s]
-            n_buckets = math.comb(z_s, a) * math.comb(w_s - z_s, b)
-            cap = min(enumeration_cap or self.n, max(self.n, 1))
-            if n_buckets > cap:
-                probed.add(_SCANNED)
-                fresh = np.flatnonzero(~seen)
-                seen[:] = True
-                if fresh.size:
-                    new_ids.append(fresh)
-                if stats is not None:
-                    stats.fell_back_to_scan = True
-                    stats.retrieved += fresh.size
-                break
-            buckets = tuple_bucket_values(q_subs[s], w_s, z_s, a, b, cap=None)
-            if stats is not None:
-                stats.substring_tuples_probed += 1
-                stats.probes += len(buckets)
-            ids = table.probe(buckets)
-            if stats is not None:
-                stats.retrieved += len(ids)
-            if ids.size:
-                fresh = ids[~seen[ids]]
-                if fresh.size:
-                    seen[fresh] = True
-                    new_ids.append(fresh)
-        if new_ids:
-            cand = np.concatenate(new_ids)
-            if stats is not None:
-                stats.verified += cand.size
-            # exact full-code tuples for all new candidates, vectorized
-            e1, e2 = self._verify_candidates(q_words, cand)
-            for t in np.unique(np.stack([e1, e2], axis=1), axis=0):
-                mask = (e1 == t[0]) & (e2 == t[1])
-                pending.setdefault((int(t[0]), int(t[1])), []).append(
-                    cand[mask]
-                )
+            amax = min(r1, z_s, rsub)
+            cov = state.cover[s]
+            for a in range(amax + 1):
+                bmax = min(r2, w_s - z_s, rsub - a)
+                b0 = cov.get(a, -1) + 1
+                if b0 > bmax:
+                    continue
+                cov[a] = bmax
+                for b in range(b0, bmax + 1):
+                    n_buckets = math.comb(z_s, a) * math.comb(w_s - z_s, b)
+                    if n_buckets > cap:
+                        state.scanned = True
+                        fresh = np.flatnonzero(~state.seen)
+                        state.seen[:] = True
+                        if fresh.size:
+                            new_ids.append(fresh)
+                        if stats is not None:
+                            stats.fell_back_to_scan = True
+                            stats.retrieved += fresh.size
+                        return (
+                            np.concatenate(new_ids) if len(new_ids) > 1
+                            else new_ids[0] if new_ids else _EMPTY_IDS
+                        )
+                    buckets = tuple_bucket_values(
+                        state.q_subs[s], w_s, z_s, a, b, cap=None
+                    )
+                    if stats is not None:
+                        stats.substring_tuples_probed += 1
+                        stats.probes += len(buckets)
+                    ids = table.probe(buckets)
+                    if stats is not None:
+                        stats.retrieved += len(ids)
+                    if ids.size:
+                        fresh = ids[~state.seen[ids]]
+                        if fresh.size:
+                            state.seen[fresh] = True
+                            new_ids.append(fresh)
+        if not new_ids:
+            return _EMPTY_IDS
+        return np.concatenate(new_ids) if len(new_ids) > 1 else new_ids[0]
 
-    def _verify_candidates(
-        self, q_words: np.ndarray, cand: np.ndarray
-    ) -> Tuple[np.ndarray, np.ndarray]:
-        """Exact full-code tuples of a gathered candidate block.
+    def _verify_and_bucket(
+        self,
+        states: List[_QueryState],
+        blocks: List[np.ndarray],
+    ) -> None:
+        """Verify every query's fresh candidate block in ONE backend call
+        and bucket the candidates by their exact full-code tuple.
 
-        "numpy": host popcounts (hamming_tuples). "pallas": the
-        verify_tuples kernel via kernels/ops.verify_tuples_op, which pads
-        the gathered block to the kernel block size and masks the padding.
-        Both return identical int64 (r10, r01); jax is imported lazily so
-        the core package stays NumPy-only unless the knob is turned.
+        Tuples are handled as packed keys ``r10 * (p + 1) + r01``
+        throughout; bucketing is one stable argsort + boundary scan per
+        query (the old np.unique(axis=0) row-sort was the dominant fixed
+        cost of small verification batches).
         """
         if self.verify_backend == "pallas":
-            import jax.numpy as jnp
+            keys_list = self._verify_group_pallas(states, blocks)
+        else:
+            keys_list = self._verify_group_numpy(states, blocks)
+        pp = self.p + 1
+        for state, cand, keys in zip(states, blocks, keys_list):
+            order = np.argsort(keys, kind="stable")
+            ks = keys[order]
+            cuts = np.flatnonzero(ks[1:] != ks[:-1]) + 1
+            bounds = np.concatenate(([0], cuts, [ks.size]))
+            pending = state.pending
+            for i in range(bounds.size - 1):
+                lo, hi = bounds[i], bounds[i + 1]
+                kk = int(ks[lo])
+                pending.setdefault((kk // pp, kk % pp), []).append(
+                    cand[order[lo:hi]]
+                )
 
-            from ..kernels.ops import verify_tuples_op
+    def _verify_group_numpy(
+        self, states: List[_QueryState], blocks: List[np.ndarray]
+    ) -> List[np.ndarray]:
+        """One vectorized host popcount over the whole z-group: blocks are
+        concatenated (ragged — no padding needed on host) with queries
+        repeated per-candidate, then split back per query."""
+        self.verify_launches += 1
+        if len(blocks) == 1:
+            r10, r01 = hamming_tuples(
+                states[0].q_words, self.db_words[blocks[0]]
+            )
+            return [r10 * (self.p + 1) + r01]
+        lengths = [b.size for b in blocks]
+        cand = np.concatenate(blocks)
+        q_rep = np.repeat(
+            np.stack([s.q_words for s in states]), lengths, axis=0
+        )
+        r10, r01 = hamming_tuples(q_rep, self.db_words[cand])
+        keys = r10 * (self.p + 1) + r01
+        out, off = [], 0
+        for length in lengths:
+            out.append(keys[off : off + length])
+            off += length
+        return out
 
-            r10, r01 = verify_tuples_op(
-                jnp.asarray(q_words),
-                jnp.asarray(self.db_words[cand]),
+    def _verify_group_pallas(
+        self, states: List[_QueryState], blocks: List[np.ndarray]
+    ) -> List[np.ndarray]:
+        """One ``verify_tuples_grouped`` launch for the z-group: blocks are
+        gathered device-side from the resident DB into a padded
+        (B_g, C_max, W) layout and come back as packed bucket keys.
+
+        Steps whose padded gather would exceed ``verify_elem_budget``
+        words are split across several launches — greedily over query
+        rows, and along the candidate axis when even a single block is
+        oversized (a fell-back-to-scan query's block is the whole DB) —
+        bounded device memory beats launch economy there.
+        """
+        from ..kernels import ops
+
+        W = self.db_words.shape[1]
+        budget = max(self.verify_elem_budget, 8 * W)
+        # largest power of two <= budget // W: keeps segments aligned with
+        # the op's pad_bucket so padding never blows past the budget
+        col_step = max(8, 1 << (max(budget // W, 1).bit_length() - 1))
+        out: List[Optional[np.ndarray]] = [None] * len(blocks)
+        i = 0
+        while i < len(blocks):
+            if ops.pad_bucket(blocks[i].size, minimum=8) * W > budget:
+                # oversized single block: chunk along the candidate axis
+                block = blocks[i]
+                q_row = states[i].q_words[None, :]
+                parts = []
+                for lo in range(0, block.size, col_step):
+                    seg = block[lo : lo + col_step]
+                    self.verify_launches += 1
+                    keys = ops.verify_tuples_grouped_op(
+                        q_row,
+                        self.db_dev,
+                        np.ascontiguousarray(seg[None, :]),
+                        np.array([seg.size], dtype=np.int32),
+                        p=self.p,
+                        use_pallas=True,
+                    )
+                    parts.append(keys[0].astype(np.int64))
+                out[i] = np.concatenate(parts)
+                i += 1
+                continue
+            # greedy row sub-batch whose shared padded width fits budget
+            j, c_pad = i, 0
+            while j < len(blocks):
+                c_j = ops.pad_bucket(blocks[j].size, minimum=8)
+                if c_j * W > budget:
+                    break  # oversized block: column-chunked next round
+                c_new = max(c_pad, c_j)
+                rows_pad = ops.pad_bucket(j - i + 1, minimum=1)
+                if j > i and rows_pad * c_new * W > budget:
+                    break
+                c_pad = c_new
+                j += 1
+            sub_states, sub_blocks = states[i:j], blocks[i:j]
+            c_max = max(b.size for b in sub_blocks)
+            idx = np.zeros((len(sub_blocks), c_max), dtype=np.int32)
+            lengths = np.empty(len(sub_blocks), dtype=np.int32)
+            for t, b in enumerate(sub_blocks):
+                idx[t, : b.size] = b
+                lengths[t] = b.size
+            self.verify_launches += 1
+            keys = ops.verify_tuples_grouped_op(
+                np.stack([s.q_words for s in sub_states]),
+                self.db_dev,
+                idx,
+                lengths,
+                p=self.p,
                 use_pallas=True,
             )
-            return (
-                np.asarray(r10).astype(np.int64),
-                np.asarray(r01).astype(np.int64),
-            )
-        return hamming_tuples(q_words, self.db_words[cand])
+            for t, b in enumerate(sub_blocks):
+                out[i + t] = keys[t, : b.size].astype(np.int64)
+            i = j
+        return out

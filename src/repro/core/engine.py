@@ -9,12 +9,19 @@ Every caller (serving, benchmarks, examples, tests) talks to one surface:
 Backends (registry below):
 
   - "linear_scan"  — exhaustive Eq. 3 scan, batched over queries with
-                     chunked popcounts (the paper's comparator).
+                     chunked popcounts (the paper's comparator);
+                     ``compute_backend="pallas"`` routes scoring through
+                     the streaming device top-K (kernels/ops.scan_topk)
+                     over a device-resident DB, with an exact float64
+                     host rerank of the preselected candidates.
   - "single_table" — one CSR-sorted table probed in the paper's tuple
                      order (§4); practical for p <= 64.
   - "amih"         — angular multi-index hashing (§5): probing-sequence
-                     sharing across same-z queries and Pallas-backed
-                     candidate verification (``verify_backend="pallas"``).
+                     sharing across same-z queries and grouped candidate
+                     verification — one vectorized NumPy popcount or one
+                     Pallas ``verify_tuples_grouped`` launch per
+                     (z-group, tuple-step) on a padded (B_g, C_max, W)
+                     layout (``verify_backend="pallas"``).
 
 All three are EXACT: ``knn_batch`` returns, for every row, results whose
 sims match per-query ``linear_scan_knn`` bit-for-bit (up to ties inside
@@ -36,6 +43,7 @@ from .enumeration import EnumerationCapExceeded
 from .linear_scan import (
     sims_against_db,
     sims_batch_against_db,
+    sims_for_ids,
     topk_from_sims,
 )
 from .packing import WORD_DTYPE, n_words, popcount
@@ -158,22 +166,68 @@ def make_engine(
 @register_engine
 class LinearScanEngine(SearchEngine):
     """Exhaustive baseline: batched Eq. 3 sims + per-row deterministic
-    top-k (identical selection code path to ``linear_scan_knn``)."""
+    top-k (identical selection code path to ``linear_scan_knn``).
+
+    ``compute_backend`` selects the scoring path:
+
+      - "numpy"  — chunked host popcounts (default; no jax dependency).
+      - "pallas" — the streaming device top-K ``kernels/ops.scan_topk``
+        (hamming_scan kernel on TPU, the identical-math XLA reference
+        elsewhere) over a device-resident copy of the DB uploaded once.
+        The device preselects ``k + slack`` candidates in float32; their
+        sims are then recomputed on host in float64 (``sims_for_ids``)
+        and re-ranked, so the returned (ids, sims) stay bit-identical to
+        ``linear_scan_knn``. Both ``k`` (fetch size) and the batch dim are
+        padded to power-of-two buckets so the jitted top-K retraces
+        O(log) times per axis at most.
+
+    This engine is also AMIH's degrade-to-scan comparator, so the kernel
+    path keeps the exhaustive fallback regime fast on device-rich hosts.
+    """
 
     name = "linear_scan"
 
-    def __init__(self, db_words: np.ndarray, p: int, chunk: int):
+    # Device preselect slack: candidates fetched beyond k so float32
+    # rounding at the selection boundary cannot evict a true top-k item.
+    # Distinct Eq. 3 sims differ by >~1/p^3 (integer cross-multiplication
+    # bound), which stays well above float32 resolution for p <= ~192;
+    # beyond that, sims can collapse in float32, so the slack grows with p
+    # to keep room for a whole collapsed boundary population. Candidates
+    # with *identical* float64 sims are genuine ties (any k of them is a
+    # correct answer), so only distinct-sim collisions matter.
+    @property
+    def _topk_slack(self) -> int:
+        return 16 + max(0, self.p - 128) // 4
+
+    def __init__(
+        self,
+        db_words: np.ndarray,
+        p: int,
+        chunk: int,
+        compute_backend: str = "numpy",
+    ):
         self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
         self.p = p
         self.chunk = chunk
+        self.compute_backend = compute_backend
+        self._db_dev = None   # device-resident codes, uploaded on first use
 
     @classmethod
     def build(
-        cls, db_words: np.ndarray, p: int, chunk: int = 1 << 15, **cfg: Any
+        cls,
+        db_words: np.ndarray,
+        p: int,
+        chunk: int = 1 << 15,
+        compute_backend: str = "numpy",
+        **cfg: Any,
     ) -> "LinearScanEngine":
         if cfg:
             raise TypeError(f"unknown linear_scan options: {sorted(cfg)}")
-        return cls(db_words, p, chunk)
+        if compute_backend not in ("numpy", "pallas"):
+            raise ValueError(
+                f"unknown compute_backend {compute_backend!r}"
+            )
+        return cls(db_words, p, chunk, compute_backend)
 
     @property
     def n(self) -> int:
@@ -189,23 +243,61 @@ class LinearScanEngine(SearchEngine):
         q = self._check_queries(q_words, self.p)
         B = q.shape[0]
         k_eff = min(k, self.n)
-        ids_out = np.empty((B, k_eff), dtype=np.int64)
-        sims_out = np.empty((B, k_eff), dtype=np.float64)
-        group = max(1, self._SIMS_BUDGET // max(self.n, 1))
-        for lo in range(0, B, group):
-            sims = sims_batch_against_db(
-                q[lo : lo + group], self.db_words, chunk=self.chunk
-            )
-            for i in range(sims.shape[0]):
-                ids_out[lo + i], sims_out[lo + i] = topk_from_sims(
-                    sims[i], k_eff
+        if self.compute_backend == "pallas" and k_eff > 0:
+            ids_out, sims_out = self._knn_batch_device(q, k_eff)
+        else:
+            ids_out = np.empty((B, k_eff), dtype=np.int64)
+            sims_out = np.empty((B, k_eff), dtype=np.float64)
+            group = max(1, self._SIMS_BUDGET // max(self.n, 1))
+            for lo in range(0, B, group):
+                sims = sims_batch_against_db(
+                    q[lo : lo + group], self.db_words, chunk=self.chunk
                 )
+                for i in range(sims.shape[0]):
+                    ids_out[lo + i], sims_out[lo + i] = topk_from_sims(
+                        sims[i], k_eff
+                    )
         # retrieved = codes scored per query: the whole DB, exhaustively.
         stats = EngineStats(
             backend=self.name, queries=B,
             per_query=[SearchStats(retrieved=self.n) for _ in range(B)],
         )
         return ids_out, sims_out, stats
+
+    def _knn_batch_device(self, q, k_eff):
+        """Device streaming top-K preselect + exact float64 host rerank.
+
+        Both the fetch size and the batch dim are padded to power-of-two
+        buckets (zero query rows score 0.0 everywhere and are sliced off),
+        so the jitted ``scan_topk`` retraces O(log) times per axis instead
+        of once per distinct (B, k).
+        """
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+
+        if self._db_dev is None:
+            self._db_dev = jnp.asarray(self.db_words)
+        B = q.shape[0]
+        k_fetch = min(
+            self.n, ops.pad_bucket(k_eff + self._topk_slack, minimum=8)
+        )
+        Bp = ops.pad_bucket(B, minimum=8)
+        qp = np.zeros((Bp, q.shape[1]), dtype=q.dtype)
+        qp[:B] = q
+        _, ids32 = ops.scan_topk(
+            jnp.asarray(qp), self._db_dev, k_fetch, use_pallas=ops.on_tpu()
+        )
+        fetched = np.asarray(ids32)[:B].astype(np.int64)   # (B, k_fetch)
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        for i in range(B):
+            cand = fetched[i]
+            sub = sims_for_ids(q[i], self.db_words, cand)  # exact float64
+            order = np.lexsort((cand, -sub))[:k_eff]
+            ids_out[i] = cand[order]
+            sims_out[i] = sub[order]
+        return ids_out, sims_out
 
 
 @register_engine
@@ -287,7 +379,23 @@ class SingleTableEngine(SearchEngine):
 @register_engine
 class AMIHEngine(SearchEngine):
     """Angular multi-index hashing (paper §5): batch-aware probing with
-    per-(p, z) probing-sequence sharing and NumPy/Pallas verification."""
+    per-(p, z) probing-sequence sharing and grouped NumPy/Pallas
+    verification.
+
+    Each tuple step verifies the fresh candidates of ALL same-z queries in
+    one backend call: ``verify_backend="numpy"`` is a single vectorized
+    host popcount over the concatenated ragged blocks;
+    ``verify_backend="pallas"`` gathers them into a padded
+    (B_g, C_max, W) device layout (power-of-two buckets -> bounded jit
+    cache) and issues one ``verify_tuples_grouped`` launch per (z-group,
+    tuple-step) against the device-resident DB uploaded at build
+    (``index.verify_launches`` counts dispatches).
+
+    ``enumeration_cap`` bounds a single substring-tuple's bucket
+    enumeration before the query degrades to an exact full scan; the
+    default scales with the DB like SingleTableEngine's
+    (``max(8n, 16384)``) instead of a fixed constant.
+    """
 
     name = "amih"
 
@@ -303,11 +411,14 @@ class AMIHEngine(SearchEngine):
         p: int,
         m: Optional[int] = None,
         verify_backend: str = "numpy",
-        enumeration_cap: Optional[int] = 2_000_000,
+        enumeration_cap: Optional[int] = None,
         **cfg: Any,
     ) -> "AMIHEngine":
         if cfg:
             raise TypeError(f"unknown amih options: {sorted(cfg)}")
+        n = np.asarray(db_words).shape[0]
+        if enumeration_cap is None:
+            enumeration_cap = max(8 * n, 1 << 14)
         index = AMIHIndex.build(
             db_words, p, m=m, verify_backend=verify_backend
         )

@@ -18,6 +18,7 @@ __all__ = [
     "linear_scan_knn",
     "sims_against_db",
     "sims_batch_against_db",
+    "sims_for_ids",
     "topk_from_sims",
 ]
 
@@ -66,6 +67,22 @@ def sims_batch_against_db(
         sims = np.where(norm_b_sq == 0, 0.0, sims)
         out[:, lo : lo + chunk] = np.where(z[:, None] == 0, 0.0, sims)
     return out
+
+
+def sims_for_ids(
+    q_words: np.ndarray, db_words: np.ndarray, ids: np.ndarray
+) -> np.ndarray:
+    """Eq. 3 sims of a *subset* of db rows vs one query (float64).
+
+    Elementwise-identical to ``sims_against_db(q, db)[ids]`` (the math is
+    per-row, so gathering first changes nothing) — this is the host-side
+    exact rescorer of the device top-K path: the kernel preselects
+    candidate ids in float32, this recomputes their sims in float64 so the
+    final output is bit-identical to ``linear_scan_knn``.
+    """
+    return sims_against_db(
+        q_words, np.asarray(db_words, dtype=WORD_DTYPE)[ids]
+    )
 
 
 def topk_from_sims(sims: np.ndarray, k: int) -> Tuple[np.ndarray, np.ndarray]:

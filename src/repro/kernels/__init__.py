@@ -2,7 +2,10 @@
 
 - hamming_scan: streaming XOR+popcount+Eq.3 scoring (linear-scan baseline,
   distributed reranker)
-- verify_tuples: batched exact-tuple verification (AMIH candidate pruning)
+- verify_tuples: batched exact-tuple verification (AMIH candidate
+  pruning); verify_tuples_grouped runs a whole z-group per launch over a
+  padded (B, C, W) layout with in-kernel padding masks and fused
+  tuple->bucket-key packing
 - blockmax_scan: per-block score maxima for the exact bound-pruned scan
   (§Perf R2 — fused traffic: codes once + (B, n_blocks))
 - flash_attention: fused flash attention forward (§Perf L2 — prefill/serve
@@ -16,7 +19,7 @@ from . import ops, ref
 from .blockmax_scan import blockmax_scores
 from .flash_attention import flash_attention
 from .hamming_scan import hamming_scan_scores
-from .verify_tuples import verify_tuples
+from .verify_tuples import verify_tuples, verify_tuples_grouped
 
 __all__ = [
     "blockmax_scores",
@@ -25,4 +28,5 @@ __all__ = [
     "ops",
     "ref",
     "verify_tuples",
+    "verify_tuples_grouped",
 ]

@@ -14,21 +14,43 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import ref
 from .hamming_scan import DEFAULT_BLK_N, DEFAULT_BLK_Q, hamming_scan_scores
+from .verify_tuples import DEFAULT_BLK_C
 from .verify_tuples import verify_tuples as _verify_tuples_kernel
+from .verify_tuples import verify_tuples_grouped as _verify_grouped_kernel
 
 __all__ = [
+    "LAUNCH_COUNTS",
     "on_tpu",
+    "pad_bucket",
     "scan_scores",
     "scan_topk",
+    "verify_tuples_grouped_op",
     "verify_tuples_op",
 ]
+
+# Host-side launch accounting: bumped once per device dispatch of each op.
+# AMIH's batched verification asserts exactly one grouped launch per
+# (z-group, tuple-step) through this counter (see tests/test_verify_grouped).
+LAUNCH_COUNTS = {"verify_grouped": 0, "verify": 0}
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def pad_bucket(size: int, minimum: int = 8) -> int:
+    """Next power of two >= max(size, minimum).
+
+    Dynamic AMIH candidate blocks are padded to these buckets before
+    hitting jit, so the trace cache holds at most O(log(max_size)) entries
+    per axis instead of one per distinct ragged shape.
+    """
+    target = max(int(size), minimum, 1)
+    return 1 << (target - 1).bit_length()
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, fill=0):
@@ -219,9 +241,89 @@ def verify_tuples_op(
         use_pallas = on_tpu()
     if not use_pallas:
         return ref.verify_tuples_ref(q_words, cand_words)
+    LAUNCH_COUNTS["verify"] += 1
     blk = min(blk_n, max(8, N))
     cp = _pad_to(cand_words, 0, blk)
     r10, r01 = _verify_tuples_kernel(
         q_words, cp, blk_n=blk, interpret=not on_tpu()
     )
     return r10[:N], r01[:N]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("p", "blk_c", "use_pallas", "interpret")
+)
+def _gather_verify_grouped(
+    q_words: jax.Array,
+    db_words: jax.Array,
+    cand_idx: jax.Array,
+    lengths: jax.Array,
+    *,
+    p: int,
+    blk_c: int,
+    use_pallas: bool,
+    interpret: bool,
+):
+    """Device side of the grouped verify: gather candidate rows from the
+    resident DB and fuse tuple computation + bucket-key packing into one
+    compiled computation (one kernel launch on the Pallas path)."""
+    cand = jnp.take(db_words, cand_idx, axis=0)        # (B, C, W) on device
+    if use_pallas:
+        return _verify_grouped_kernel(
+            q_words, cand, lengths, p=p, blk_c=blk_c, interpret=interpret
+        )
+    return ref.verify_tuples_grouped_ref(q_words, cand, lengths, p)
+
+
+def verify_tuples_grouped_op(
+    q_words,
+    db_words: jax.Array,
+    cand_idx,
+    lengths,
+    *,
+    p: int,
+    use_pallas: bool | None = None,
+    blk_c: int = DEFAULT_BLK_C,
+):
+    """Batched AMIH verification: one launch for a whole z-group.
+
+    q_words (B, W) packed queries; db_words (N, W) device-resident codes;
+    cand_idx (B, C_max) int32 candidate rows (entries past ``lengths[b]``
+    are don't-cares); lengths (B,) int32 true candidate counts. Returns a
+    host (B, C_max) int32 array of packed bucket keys
+    ``r10 * (p + 1) + r01`` with -1 in every padded slot.
+
+    B and C_max are padded up to power-of-two buckets (``pad_bucket``)
+    before the jitted gather+verify, so the trace cache stays
+    O(log B * log C) instead of one entry per ragged candidate shape.
+    Candidate rows are gathered from ``db_words`` *on device* — the host
+    ships only the (B, C_max) index matrix, never the code rows.
+    """
+    q = jnp.asarray(q_words)
+    idx = np.ascontiguousarray(np.asarray(cand_idx, dtype=np.int32))
+    lens = np.asarray(lengths, dtype=np.int32)
+    B, C = idx.shape
+    if C == 0 or B == 0:
+        return np.full((B, C), -1, dtype=np.int32)
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    Bp = pad_bucket(B, minimum=1)
+    Cp = pad_bucket(C, minimum=8)
+    blk = min(blk_c, Cp)
+    qp = _pad_to(q, 0, Bp)
+    idxp = np.zeros((Bp, Cp), dtype=np.int32)
+    idxp[:B, :C] = idx
+    lensp = np.zeros(Bp, dtype=np.int32)
+    lensp[:B] = lens
+    LAUNCH_COUNTS["verify_grouped"] += 1
+    keys = _gather_verify_grouped(
+        qp,
+        db_words,
+        jnp.asarray(idxp),
+        jnp.asarray(lensp),
+        p=p,
+        blk_c=blk,
+        use_pallas=use_pallas,
+        interpret=not on_tpu(),
+    )
+    return np.asarray(keys)[:B, :C]

@@ -15,6 +15,7 @@ __all__ = [
     "scores_ref",
     "scan_scores_ref",
     "verify_tuples_ref",
+    "verify_tuples_grouped_ref",
 ]
 
 
@@ -71,3 +72,23 @@ def verify_tuples_ref(q_words: jnp.ndarray, cand_words: jnp.ndarray):
     """Single query vs candidate block: (W,), (N, W) -> (r10, r01) (N,) int32."""
     r10, r01 = tuples_ref(q_words[None, :], cand_words)
     return r10[0], r01[0]
+
+
+def verify_tuples_grouped_ref(
+    q_words: jnp.ndarray,
+    cand_words: jnp.ndarray,
+    lengths: jnp.ndarray,
+    p: int,
+):
+    """Grouped-verification oracle: (B, W), (B, C, W), (B,) -> (B, C) int32
+    packed bucket keys ``r10 * (p + 1) + r01``, -1 where ``c >= lengths[b]``
+    (padding). Mirrors kernels/verify_tuples.verify_tuples_grouped."""
+    q = q_words.astype(jnp.uint32)[:, None, :]
+    c = cand_words.astype(jnp.uint32)
+    r10 = popcount32(q & ~c).sum(axis=-1).astype(jnp.int32)
+    r01 = popcount32(~q & c).sum(axis=-1).astype(jnp.int32)
+    key = r10 * jnp.int32(p + 1) + r01
+    valid = jnp.arange(c.shape[1], dtype=jnp.int32)[None, :] < (
+        lengths.astype(jnp.int32)[:, None]
+    )
+    return jnp.where(valid, key, jnp.int32(-1))

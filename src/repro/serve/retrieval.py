@@ -42,7 +42,18 @@ class RetrievalConfig:
     m_tables: Optional[int] = None    # None -> paper's p/log2(n)
     batch_size: int = 32              # encode batch
     engine: str = "amih"              # core.engine backend name
-    verify_backend: str = "numpy"     # AMIH candidate verification
+    # AMIH grouped candidate verification: "numpy" (one vectorized host
+    # popcount per z-group/tuple-step) or "pallas" (one
+    # verify_tuples_grouped launch per step over the padded
+    # (B_g, C_max, W) layout; DB stays device-resident from build).
+    verify_backend: str = "numpy"
+    # linear_scan scoring: "numpy" (chunked host popcounts) or "pallas"
+    # (streaming device top-K via kernels/ops.scan_topk + exact float64
+    # host rerank).
+    compute_backend: str = "numpy"
+    # None -> backend default (max(8n, 16384)): bucket enumerations past
+    # this degrade the query to an exact scan.
+    enumeration_cap: Optional[int] = None
     search_batch_size: int = 32       # queued queries per knn_batch step
 
 
@@ -134,7 +145,12 @@ class RetrievalService:
             cfg = {
                 "m": self.rcfg.m_tables,
                 "verify_backend": self.rcfg.verify_backend,
+                "enumeration_cap": self.rcfg.enumeration_cap,
             }
+        elif self.rcfg.engine == "linear_scan":
+            cfg = {"compute_backend": self.rcfg.compute_backend}
+        elif self.rcfg.engine == "single_table":
+            cfg = {"enumeration_cap": self.rcfg.enumeration_cap}
         self.engine = make_engine(
             self.rcfg.engine, self.db_words, self.rcfg.code_bits, **cfg
         )

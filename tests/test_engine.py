@@ -194,3 +194,61 @@ def test_bad_query_shape_raises():
     eng = make_engine("amih", db, p)
     with pytest.raises(ValueError, match="packed words"):
         eng.knn_batch(np.zeros((4, 7), np.uint32), 3)
+
+
+@given(
+    p=st.sampled_from([32, 64, 128]),
+    B=st.sampled_from([1, 8, 64]),
+    n=st.integers(20, 300),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=10, deadline=None)
+def test_linear_scan_pallas_compute_backend_exact(p, B, n, k, seed):
+    """compute_backend="pallas" (device scan_topk preselect + float64 host
+    rerank) stays bit-identical to linear_scan_knn, up to in-tuple ties."""
+    db_bits = synthetic_binary_codes(n, p, seed=seed)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=seed + 1))
+    db = pack_bits(db_bits)
+    eng = make_engine("linear_scan", db, p, compute_backend="pallas")
+    ids, sims, stats = eng.knn_batch(qs, k)
+    _check_batch_exact(ids, sims, qs, db, min(k, n))
+    assert stats.backend == "linear_scan" and stats.queries == B
+    # ids within a row must be unique (no candidate fetched twice)
+    for i in range(B):
+        assert len(set(ids[i].tolist())) == ids.shape[1]
+
+
+def test_linear_scan_unknown_compute_backend_raises():
+    db = pack_bits(np.zeros((4, 32), np.uint8))
+    with pytest.raises(ValueError, match="compute_backend"):
+        make_engine("linear_scan", db, 32, compute_backend="cuda")
+
+
+def test_linear_scan_pallas_uploads_db_once():
+    p, n = 64, 150
+    db_bits = synthetic_binary_codes(n, p, seed=30)
+    qs = pack_bits(synthetic_queries(db_bits, 6, seed=31))
+    db = pack_bits(db_bits)
+    eng = make_engine("linear_scan", db, p, compute_backend="pallas")
+    assert eng._db_dev is None  # lazy: upload on first query
+    eng.knn_batch(qs, 4)
+    dev0 = eng._db_dev
+    assert dev0 is not None
+    eng.knn_batch(qs, 7)
+    assert eng._db_dev is dev0
+
+
+def test_amih_enumeration_cap_default_scales_with_n():
+    """AMIH's default cap matches SingleTableEngine's max(8n, 16384)
+    instead of a hardcoded constant."""
+    p = 64
+    for n in (10, 3000, 50_000):
+        db = pack_bits(np.zeros((n, p), np.uint8))
+        amih = make_engine("amih", db, p)
+        single = make_engine("single_table", db, p)
+        assert amih.enumeration_cap == max(8 * n, 1 << 14)
+        assert amih.enumeration_cap == single.enumeration_cap
+    # explicit values still win
+    db = pack_bits(np.zeros((100, p), np.uint8))
+    assert make_engine("amih", db, p, enumeration_cap=7).enumeration_cap == 7
