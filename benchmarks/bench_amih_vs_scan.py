@@ -14,9 +14,15 @@ paper's *claims*: query time growing ~sqrt(n) for AMIH vs linearly for
 scan, speedups growing with n into orders of magnitude, and batched
 probing amortizing the per-query overhead.
 
+A ``--shards`` axis times the pod-scale backends ("sharded_scan" /
+"sharded_amih", repro.shard) over host-mode ShardPlan layouts at each
+shard count (default 1 vs 8), so the perf trajectory covers the sharded
+cells too.
+
 Emits artifacts/bench/amih_vs_scan.csv plus a machine-readable
-BENCH_engine.json at the repo root (per-backend, per-batch-size
-latency/probes/verifications) so future PRs have a perf trajectory.
+BENCH_engine.json at the repo root (per-backend, per-batch-size,
+per-shard-count latency/probes/verifications) so future PRs have a perf
+trajectory.
 
 Run:  PYTHONPATH=src python benchmarks/bench_amih_vs_scan.py --batch 64
 """
@@ -49,13 +55,23 @@ REPEATS = 3  # best-of; host timing at sub-ms/query is noisy, and a
              # single transient (GC, scheduler) can poison a 2-sample min
 
 
+def _verify_launches(engine) -> int:
+    """Grouped-verify dispatches so far: the single index's counter, or
+    the per-shard sum for the sharded AMIH backend."""
+    index = getattr(engine, "index", None)
+    if index is not None:
+        return getattr(index, "verify_launches", 0)
+    return sum(
+        ix.verify_launches for _, ix in getattr(engine, "indexes", [])
+    )
+
+
 def _time_batched(engine, qs, k, batch):
     """Best-of-REPEATS wall seconds + aggregated stats for all queries,
     batch at a time (first repeat warms caches, as serving would).
     ``verify_launches`` is per-sweep (one pass over all queries)."""
     best, totals = float("inf"), {}
-    index = getattr(engine, "index", None)
-    launches0 = getattr(index, "verify_launches", 0)
+    launches0 = _verify_launches(engine)
     for _ in range(REPEATS):
         t0 = time.perf_counter()
         totals = {"probes": 0, "verified": 0, "fell_back_to_scan": 0}
@@ -65,7 +81,7 @@ def _time_batched(engine, qs, k, batch):
             for key in totals:
                 totals[key] += agg.get(key, 0)
         best = min(best, time.perf_counter() - t0)
-    launches = getattr(index, "verify_launches", 0) - launches0
+    launches = _verify_launches(engine) - launches0
     totals["verify_launches"] = launches // REPEATS
     return best, totals
 
@@ -86,7 +102,8 @@ def _time_seed_loop(index, qs, k):
 
 def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
         ps=(64, 128), ks=(1, 10, 100), out_json: str | None = None,
-        sizes=None, csv_name: str = "amih_vs_scan.csv"):
+        sizes=None, csv_name: str = "amih_vs_scan.csv",
+        shards=(1, 8)):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
     if sizes is None:
         sizes = [n for n in (10_000, 100_000, 1_000_000, 10_000_000)
@@ -94,12 +111,41 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
     else:  # explicit sizes (bench_check retries a narrowed workload)
         sizes = [n for n in sizes if n <= max_n]
     rows = []
+
+    def emit(backend, p, n, K, batch, n_shards, t, totals, *,
+             m_tables=0, t_seed=None, t_scan=None, t_build=0.0):
+        t_ref = t_scan if t_scan is not None else t
+        rows.append({
+            "backend": backend, "p": p, "n": n, "K": K,
+            "batch": batch, "shards": n_shards, "queries": nq,
+            "m_tables": m_tables,
+            "total_s": round(t, 6),
+            "ms_per_query": round(1e3 * t / nq, 4),
+            "qps": round(nq / max(t, 1e-9), 2),
+            "probes": totals.get("probes", 0),
+            "verified": totals.get("verified", 0),
+            "verify_launches": totals.get("verify_launches", 0),
+            "fell_back_to_scan": totals.get("fell_back_to_scan", 0),
+            "seed_loop_ms_per_query":
+                "" if t_seed is None else round(1e3 * t_seed / nq, 4),
+            "speedup_vs_seed_loop":
+                "" if t_seed is None
+                else round(t_seed / max(t, 1e-9), 3),
+            "scan_ms_per_query": round(1e3 * t_ref / nq, 4),
+            "speedup_vs_scan": round(t_ref / max(t, 1e-9), 2),
+            "index_build_s": round(t_build, 3),
+        })
+        return rows[-1]
+
     for p in ps:
         for n in sizes:
             db_bits, db = make_db(n, p, seed=0)
             _, qs = make_queries(db_bits, nq, seed=1)
             t_build0 = time.perf_counter()
-            amih = make_engine("amih", db, p)
+            # query_cache_size=0: the bench measures probing, and its
+            # repeated sweeps over one query set would otherwise time the
+            # hot-query LRU instead of the algorithm.
+            amih = make_engine("amih", db, p, query_cache_size=0)
             t_build = time.perf_counter() - t_build0
             scan = make_engine("linear_scan", db, p)
             for K in ks:
@@ -107,27 +153,9 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                 t_scan, _ = _time_batched(scan, qs, K, max(batches))
                 for batch in batches:
                     t_amih, totals = _time_batched(amih, qs, K, batch)
-                    rows.append({
-                        "backend": "amih", "p": p, "n": n, "K": K,
-                        "batch": batch, "queries": nq,
-                        "m_tables": amih.index.m,
-                        "total_s": round(t_amih, 6),
-                        "ms_per_query": round(1e3 * t_amih / nq, 4),
-                        "qps": round(nq / max(t_amih, 1e-9), 2),
-                        "probes": totals["probes"],
-                        "verified": totals["verified"],
-                        "verify_launches": totals["verify_launches"],
-                        "fell_back_to_scan": totals["fell_back_to_scan"],
-                        "seed_loop_ms_per_query":
-                            round(1e3 * t_seed / nq, 4),
-                        "speedup_vs_seed_loop":
-                            round(t_seed / max(t_amih, 1e-9), 3),
-                        "scan_ms_per_query": round(1e3 * t_scan / nq, 4),
-                        "speedup_vs_scan":
-                            round(t_scan / max(t_amih, 1e-9), 2),
-                        "index_build_s": round(t_build, 3),
-                    })
-                    r = rows[-1]
+                    r = emit("amih", p, n, K, batch, 1, t_amih, totals,
+                             m_tables=amih.index.m, t_seed=t_seed,
+                             t_scan=t_scan, t_build=t_build)
                     print(
                         f"p={p} n={n:>9} K={K:>3} B={batch:>3} "
                         f"amih={r['ms_per_query']:.3f}ms/q "
@@ -135,27 +163,35 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                         f"scan={r['scan_ms_per_query']:.3f}ms/q "
                         f"({r['speedup_vs_scan']}x)"
                     )
-                rows.append({
-                    "backend": "linear_scan", "p": p, "n": n, "K": K,
-                    "batch": max(batches), "queries": nq, "m_tables": 0,
-                    "total_s": round(t_scan, 6),
-                    "ms_per_query": round(1e3 * t_scan / nq, 4),
-                    "qps": round(nq / max(t_scan, 1e-9), 2),
-                    "probes": 0, "verified": n * nq,
-                    "verify_launches": 0,
-                    "fell_back_to_scan": 0,
-                    "seed_loop_ms_per_query": "",
-                    "speedup_vs_seed_loop": "",
-                    "scan_ms_per_query": round(1e3 * t_scan / nq, 4),
-                    "speedup_vs_scan": 1.0,
-                    "index_build_s": 0.0,
-                })
+                emit("linear_scan", p, n, K, max(batches), 1, t_scan,
+                     {"verified": n * nq}, t_scan=t_scan)
+            # sharded cells: the pod-scale backends over S host shards
+            # (S=1 is the degenerate single-shard layout; the multi-device
+            # mesh path is exercised by tests/test_shard.py)
+            for S in shards:
+                if S > n:
+                    continue
+                sh_scan = make_engine("sharded_scan", db, p, num_shards=S)
+                sh_amih = make_engine("sharded_amih", db, p, num_shards=S)
+                for K in ks:
+                    t_s, tot_s = _time_batched(sh_scan, qs, K, max(batches))
+                    emit("sharded_scan", p, n, K, max(batches), S, t_s,
+                         tot_s)
+                    t_a, tot_a = _time_batched(sh_amih, qs, K, max(batches))
+                    r = emit("sharded_amih", p, n, K, max(batches), S, t_a,
+                             tot_a)
+                    print(
+                        f"p={p} n={n:>9} K={K:>3} S={S:>2} "
+                        f"sharded_amih={r['ms_per_query']:.3f}ms/q "
+                        f"sharded_scan={1e3 * t_s / nq:.3f}ms/q"
+                    )
     path = write_csv(csv_name, rows)
     payload = {
         "bench": "engine",
         "workload": {
             "sizes": sizes, "ps": list(ps), "ks": list(ks),
             "batches": list(batches), "queries": nq,
+            "shards": list(shards),
             "codes": "synthetic clustered (AQBC-like)",
         },
         "rows": rows,
@@ -179,6 +215,10 @@ def _parse_args(argv=None):
     ap.add_argument("--batch", type=positive_int, nargs="+",
                     default=[1, 8, 64],
                     help="batch sizes for knn_batch (axis of the sweep)")
+    ap.add_argument("--shards", type=positive_int, nargs="+",
+                    default=[1, 8],
+                    help="shard counts for the sharded_scan/sharded_amih "
+                         "cells (host-mode ShardPlan shards)")
     ap.add_argument("--max-n", type=int, default=None,
                     help="largest DB size (default REPRO_BENCH_MAX_N or 1e6)")
     ap.add_argument("--nq", type=int, default=64, help="queries per cell")
@@ -193,4 +233,5 @@ def _parse_args(argv=None):
 if __name__ == "__main__":
     a = _parse_args()
     run(max_n=a.max_n, nq=a.nq, batches=tuple(sorted(set(a.batch))),
-        ps=tuple(a.p), ks=tuple(a.k), out_json=a.out)
+        ps=tuple(a.p), ks=tuple(a.k), out_json=a.out,
+        shards=tuple(sorted(set(a.shards))))

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import linear_scan_knn, pack_bits
-from repro.core.distributed import sharded_scan_topk
+from repro.shard import sharded_scan_topk
 from repro.data import synthetic_binary_codes, synthetic_queries
 from repro.launch.mesh import make_mesh
 

@@ -80,8 +80,28 @@ def main():
     assert np.array_equal(sims_d, sims_l), "device path exactness violated!"
     print(f"kernel-backed scan (compute_backend='pallas'): "
           f"{1e3 * t_dev:7.2f}ms, sims bit-identical")
-    print("all queries exact — engine('amih') == engine('linear_scan'), "
-          "orders faster.")
+
+    # pod-scale sharded backends (repro.shard): the DB row-partitioned by
+    # a ShardPlan — per-shard global-id offsets, balanced remainder — and
+    # served through the SAME knn_batch API. Here the plan is host-mode
+    # (num_shards); on a multi-device host pass a mesh instead:
+    #   from repro.launch.mesh import make_search_mesh
+    #   make_engine("sharded_amih", db, p, mesh=make_search_mesh())
+    from repro.shard import ShardPlan
+
+    plan = ShardPlan.balanced(n, 8)
+    print(f"shard plan: {plan.summary()}")
+    sharded = make_engine("sharded_amih", db, p, plan=plan)
+    t0 = time.perf_counter()
+    _, sims_s, st_s = sharded.knn_batch(qs, k)
+    t_sh = time.perf_counter() - t0
+    assert np.array_equal(sims_s, sims_l), "sharded exactness violated!"
+    early = sum(d["early_stopped"] for d in st_s.per_shard)
+    print(f"sharded_amih over {st_s.shards} shards: {1e3 * t_sh:6.2f}ms, "
+          f"sims bit-identical; {early} per-shard searches stopped early "
+          f"(global k-th cosine bound)")
+    print("all queries exact — engine('amih') == engine('linear_scan') == "
+          "engine('sharded_amih'), orders faster.")
 
 
 if __name__ == "__main__":

@@ -4,9 +4,10 @@ the committed BENCH_engine.json.
 
 A fresh ``bench_amih_vs_scan`` sweep (same workload parameters as the
 committed baseline, restricted to the requested batch sizes) is compared
-cell-by-cell: for every AMIH (p, n, K, batch) cell present in both runs,
-fail if fresh throughput regressed by more than ``--threshold`` (default
-25% on ms_per_query). Host timing is noisy, so single-cell blips on a
+cell-by-cell: for every amih / sharded_amih / sharded_scan
+(backend, p, n, K, batch, shards) cell present in both runs, fail if
+fresh throughput regressed by more than ``--threshold`` (default 25% on
+ms_per_query). Host timing is noisy, so single-cell blips on a
 loaded machine are possible — the gate is opt-in (wired into
 scripts/verify.sh behind REPRO_BENCH_CHECK=1), not part of tier-1.
 
@@ -32,16 +33,27 @@ sys.path.insert(0, os.path.join(_ROOT, "src"))
 BASELINE_JSON = os.path.join(_ROOT, "BENCH_engine.json")
 
 
-def _cells(payload, batches, max_n):
+_GATED_BACKENDS = ("amih", "sharded_amih", "sharded_scan")
+
+
+def _cells(payload, batches, max_n, shards):
+    """(backend, p, n, K, batch, shards) -> ms_per_query for every gated
+    cell. Sharded rows ride the max batch size regardless of --batch;
+    pre-shard baselines carry shards=1 implicitly."""
     out = {}
     for row in payload["rows"]:
-        if row["backend"] != "amih":
+        if row["backend"] not in _GATED_BACKENDS:
             continue
-        if row["batch"] not in batches or row["n"] > max_n:
+        n_shards = row.get("shards", 1)
+        sharded = row["backend"] != "amih"
+        if sharded:
+            if n_shards not in shards or row["n"] > max_n:
+                continue
+        elif row["batch"] not in batches or row["n"] > max_n:
             continue
-        out[(row["p"], row["n"], row["K"], row["batch"])] = float(
-            row["ms_per_query"]
-        )
+        key = (row["backend"], row["p"], row["n"], row["K"],
+               row["batch"], n_shards)
+        out[key] = float(row["ms_per_query"])
     return out
 
 
@@ -49,6 +61,9 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--batch", type=int, nargs="+", default=[64],
                     help="batch sizes to re-run and gate on")
+    ap.add_argument("--shards", type=int, nargs="+", default=None,
+                    help="shard counts to gate the sharded backends on "
+                         "(default: every count in the baseline workload)")
     ap.add_argument("--threshold", type=float, default=0.25,
                     help="max tolerated ms_per_query regression (0.25=25%%)")
     ap.add_argument("--max-n", type=int, default=None,
@@ -65,6 +80,11 @@ def main(argv=None) -> int:
         baseline = json.load(f)
     wl = baseline["workload"]
     max_n = args.max_n or max(wl["sizes"])
+    shards = set(args.shards or wl.get("shards", [1]))
+    # Sharded rows always ride a sweep's max batch size, so the fresh
+    # sweep must include the baseline's max batch or the sharded cell
+    # keys would never intersect (the amih gate still honors --batch).
+    sweep_batches = tuple(sorted(set(args.batch) | {max(wl["batches"])}))
 
     import bench_amih_vs_scan as bench
 
@@ -79,19 +99,22 @@ def main(argv=None) -> int:
             bench.run(
                 max_n=sweep_max_n,
                 nq=wl["queries"],
-                batches=tuple(sorted(set(args.batch))),
+                batches=sweep_batches,
                 ps=tuple(ps),
                 ks=tuple(ks),
                 out_json=fresh_path,
                 sizes=sizes,
                 csv_name="amih_vs_scan_check.csv",
+                shards=tuple(sorted(shards)),
             )
             with open(fresh_path) as f:
-                return _cells(json.load(f), set(args.batch), sweep_max_n)
+                return _cells(
+                    json.load(f), set(args.batch), sweep_max_n, shards
+                )
         finally:
             os.unlink(fresh_path)
 
-    base_cells = _cells(baseline, set(args.batch), max_n)
+    base_cells = _cells(baseline, set(args.batch), max_n, shards)
     fresh_cells = fresh_sweep(wl["ps"], wl["ks"], max_n)
     shared = sorted(set(base_cells) & set(fresh_cells))
     if not shared:
@@ -114,10 +137,10 @@ def main(argv=None) -> int:
         print(f"bench_check: {len(failures)} cell(s) over threshold; "
               f"re-measuring once to rule out host noise...")
         retry = fresh_sweep(
-            sorted({c[0] for c in failures}),
-            sorted({c[2] for c in failures}),
-            max(c[1] for c in failures),
-            sizes=sorted({c[1] for c in failures}),
+            sorted({c[1] for c in failures}),
+            sorted({c[3] for c in failures}),
+            max(c[2] for c in failures),
+            sizes=sorted({c[2] for c in failures}),
         )
         for cell, ms in retry.items():
             if cell in fresh_cells:
@@ -128,15 +151,16 @@ def main(argv=None) -> int:
         base_ms, fresh_ms = base_cells[cell], fresh_cells[cell]
         ratio = fresh_ms / max(base_ms, 1e-9)
         status = "FAIL" if cell in failures else "ok"
-        p, n, K, batch = cell
-        print(f"  [{status}] p={p} n={n:>9} K={K:>3} B={batch:>3} "
+        backend, p, n, K, batch, n_shards = cell
+        print(f"  [{status}] {backend:>13} p={p} n={n:>9} K={K:>3} "
+              f"B={batch:>3} S={n_shards:>2} "
               f"baseline={base_ms:.3f} fresh={fresh_ms:.3f} ms/q "
               f"({ratio:.2f}x)")
     if failures:
-        print(f"bench_check: {len(failures)}/{len(shared)} AMIH cells "
+        print(f"bench_check: {len(failures)}/{len(shared)} engine cells "
               f"regressed beyond {args.threshold:.0%}")
         return 1
-    print(f"bench_check: all {len(shared)} AMIH cells within "
+    print(f"bench_check: all {len(shared)} engine cells within "
           f"{args.threshold:.0%} of the committed baseline")
     return 0
 

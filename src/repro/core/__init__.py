@@ -9,7 +9,9 @@ Public surface:
   - AMIHIndex / AMIHStats                   (angular multi-index hashing, §5)
   - linear_scan_knn                         (the paper's baseline)
   - aqbc                                    (binarization used in §6)
-  - distributed                             (sharded scan for pod-scale DBs)
+  - repro.shard                             (pod-scale sharded subsystem:
+    ShardPlan + "sharded_scan"/"sharded_amih" backends; core.distributed
+    re-exports its primitives for old imports)
 
 The index classes remain importable for algorithm-level work; serving,
 benchmarks, and examples go through ``make_engine(backend, db_words, p)``

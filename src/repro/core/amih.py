@@ -151,12 +151,20 @@ class _QueryState:
 
 @dataclass
 class AMIHIndex:
-    """Exact angular-KNN index over n packed p-bit codes."""
+    """Exact angular-KNN index over n packed p-bit codes.
+
+    ``id_offset`` supports shard-local builds: an index over rows
+    [offset, offset + n) of a larger sharded DB emits *global* ids
+    (local row + offset) from every public search method, so per-shard
+    result lists merge without any caller-side remapping. Internal state
+    (tables, dedup bitmaps, device gathers) stays local-row-indexed.
+    """
 
     p: int
     m: int
     db_words: np.ndarray = field(repr=False)   # (n, W) uint32 — for verification
     tables: List[_SubTable] = field(repr=False, default_factory=list)
+    id_offset: int = 0
     # Candidate-verification backend: "numpy" (one vectorized host popcount
     # per z-group and tuple step) or "pallas" (one verify_tuples_grouped
     # launch per z-group and tuple step — native on TPU, interpret-mode
@@ -193,6 +201,7 @@ class AMIHIndex:
         p: int,
         m: Optional[int] = None,
         verify_backend: str = "numpy",
+        id_offset: int = 0,
     ) -> "AMIHIndex":
         if verify_backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
@@ -219,7 +228,7 @@ class AMIHIndex:
             )
         index = cls(
             p=p, m=m, db_words=db_words, tables=tables,
-            verify_backend=verify_backend,
+            verify_backend=verify_backend, id_offset=id_offset,
         )
         if verify_backend == "pallas":
             index.db_dev  # upload once, at build time
@@ -288,12 +297,75 @@ class AMIHIndex:
         out_sims = np.empty((B, k), dtype=np.float64)
         if k == 0:
             return out_ids, out_sims
+        for s in self._run_groups(q_words, k, stats, enumeration_cap):
+            out_ids[s.qi] = s.out_ids
+            out_sims[s.qi] = s.out_sims
+        if self.id_offset:
+            out_ids += self.id_offset
+        return out_ids, out_sims
 
+    def knn_batch_bounded(
+        self,
+        q_words: np.ndarray,
+        k: int,
+        stop_below: np.ndarray,
+        stats: Optional[List[AMIHStats]] = None,
+        enumeration_cap: Optional[int] = None,
+    ) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """``knn_batch`` with a per-query early-termination bound: query
+        ``qi`` stops as soon as the next probing tuple's sim drops
+        *strictly below* ``stop_below[qi]``, so its result list may hold
+        fewer than k entries (ragged -> returned as a per-query list).
+
+        This is the cross-shard termination rule of the sharded AMIH
+        engine: once the global top-K heap (merged from other shards)
+        holds K results with k-th cosine >= bound, a shard may stop —
+        every un-emitted local code has sim <= the current tuple's
+        sim < bound and cannot enter the global top-K. Ties at exactly
+        the bound are still collected, so the merged sims stay
+        bit-identical to an unsharded search. Emitted ids carry
+        ``id_offset`` like every public method.
+        """
+        q_words = np.ascontiguousarray(
+            np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
+        )
+        B = q_words.shape[0]
+        bounds = np.broadcast_to(
+            np.asarray(stop_below, dtype=np.float64), (B,)
+        )
+        if stats is not None and len(stats) != B:
+            raise ValueError(f"stats list has {len(stats)} entries for B={B}")
+        k = min(k, self.n)
+        empty = (_EMPTY_IDS, np.empty(0, dtype=np.float64))
+        out: List[Tuple[np.ndarray, np.ndarray]] = [empty] * B
+        if k == 0:
+            return out
+        for s in self._run_groups(
+            q_words, k, stats, enumeration_cap, stop_below=bounds
+        ):
+            ids = np.asarray(s.out_ids, dtype=np.int64) + self.id_offset
+            out[s.qi] = (ids, np.asarray(s.out_sims, dtype=np.float64))
+        return out
+
+    def _run_groups(
+        self,
+        q_words: np.ndarray,
+        k: int,
+        stats: Optional[List[AMIHStats]],
+        enumeration_cap: Optional[int],
+        stop_below: Optional[np.ndarray] = None,
+    ) -> List[_QueryState]:
+        """Shared group loop of ``knn_batch`` / ``knn_batch_bounded``:
+        same-z queries advance in lockstep through the probe ->
+        grouped-verify -> bucket -> emit pipeline. Returns every query's
+        final state (out_ids/out_sims hold LOCAL row ids)."""
+        B = q_words.shape[0]
         zs = popcount(q_words)
         groups: Dict[int, List[int]] = {}
         for qi in range(B):
             groups.setdefault(int(zs[qi]), []).append(qi)
 
+        done_states: List[_QueryState] = []
         for z, qis in groups.items():
             states = [self._make_state(q_words[qi], qi, stats) for qi in qis]
             r_hat = rhat(z)
@@ -302,6 +374,16 @@ class AMIHIndex:
                 if not active:
                     break
                 s_val = sim_value(self.p, z, r1, r2)
+                if stop_below is not None:
+                    # every later tuple has sim <= s_val: below the bound
+                    # nothing more from this query can reach the global
+                    # top-K (ties at the bound keep probing).
+                    for s in active:
+                        if s_val < stop_below[s.qi]:
+                            s.done = True
+                    active = [s for s in active if not s.done]
+                    if not active:
+                        break
                 # 1. probe: per-query table lookups -> fresh candidate ids
                 fresh_states: List[_QueryState] = []
                 fresh_blocks: List[np.ndarray] = []
@@ -332,10 +414,8 @@ class AMIHIndex:
                         s.out_sims.extend([s_val] * take)
                         if len(s.out_ids) >= k:
                             s.done = True
-            for s in states:
-                out_ids[s.qi] = s.out_ids
-                out_sims[s.qi] = s.out_sims
-        return out_ids, out_sims
+            done_states.extend(states)
+        return done_states
 
     def _probing_iter(self, z: int) -> Iterator[Tuple[int, int]]:
         """Probing sequence for popcount z, served from the per-index
@@ -404,7 +484,7 @@ class AMIHIndex:
         ]
         if not matches:
             return np.empty(0, dtype=np.int64)
-        return np.sort(np.concatenate(matches))
+        return np.sort(np.concatenate(matches)) + self.id_offset
 
     # ------------------------------------------------------------ private
     def _probe_tables_for_tuple(

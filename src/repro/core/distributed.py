@@ -1,114 +1,24 @@
-"""Distributed angular search: DB sharded over the mesh ``data`` axis.
+"""Back-compat shim: the device-sharded scan moved to ``repro.shard``.
 
-The 10^9+-code regime (paper §6, SIFT-1B) does not fit one accelerator's
-HBM; production deployments shard the packed code array row-wise across the
-``data`` axis (and across pods via the ``pod`` axis). A query broadcast to
-all shards runs the streaming scan/verify kernels locally, keeps a local
-top-K, and a global top-K is obtained by all-gathering the K-sized partial
-results (K * devices values, tiny) and re-selecting — one all-gather of
-O(K) per query batch, no code movement.
-
-This module is pure pjit/shard_map JAX and is exercised both by tests (with
-8 fake CPU devices in a subprocess) and by the production-mesh dry-run
-(``retrieval_step``).
+The one-off helper grew into the sharded search subsystem
+(``repro.shard``: ShardPlan + distributed primitives + the
+"sharded_scan"/"sharded_amih" engine backends). Existing imports of
+``repro.core.distributed`` keep working through this re-export; new code
+should import from ``repro.shard``.
 """
 
 from __future__ import annotations
 
-import functools
-from typing import Tuple
+from ..shard.distributed import (  # noqa: F401
+    make_retrieval_step,
+    sharded_scan_candidates,
+    sharded_scan_topk,
+)
+from ..shard.plan import ShardPlan  # noqa: F401
 
-import jax
-import jax.numpy as jnp
-
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from .. import jax_compat
-
-from ..kernels import ops
-
-__all__ = ["sharded_scan_topk", "make_retrieval_step"]
-
-
-def _local_topk_then_merge(q_words, db_shard, shard_offset, k, chunk, axes):
-    """Per-shard body: local streaming top-K then cross-shard merge."""
-    sims, ids = ops.scan_topk(q_words, db_shard, k, chunk=chunk)
-    ids = ids + shard_offset            # local -> global ids
-    # all-gather the K-sized partials along the DB-sharding axes
-    all_sims = sims
-    all_ids = ids
-    for ax in axes:
-        all_sims = jax.lax.all_gather(all_sims, ax, axis=1, tiled=True)
-        all_ids = jax.lax.all_gather(all_ids, ax, axis=1, tiled=True)
-    best_sims, pos = jax.lax.top_k(all_sims, k)
-    best_ids = jnp.take_along_axis(all_ids, pos, axis=1)
-    return best_sims, best_ids
-
-
-def sharded_scan_topk(
-    mesh: Mesh,
-    q_words: jax.Array,
-    db_words: jax.Array,
-    k: int,
-    *,
-    chunk: int = 1 << 14,
-    shard_axes: Optional[Tuple[str, ...]] = None,
-) -> Tuple[jax.Array, jax.Array]:
-    """Exact global angular top-K with the DB row-sharded over the mesh.
-
-    q_words: (B, W) replicated; db_words: (N, W) sharded on rows.
-    Returns (sims, ids) (B, k) replicated. N must divide evenly by the
-    number of DB shards (pad the DB with zero codes otherwise — zero codes
-    score 0.0 and are filtered by id >= 0 semantics upstream).
-
-    shard_axes defaults to EVERY mesh axis (§Perf iteration R1): the scan
-    is embarrassingly row-parallel, so the original pod/data-only layout
-    left the 16-wide 'model' axis idle — 16x redundant per-device work.
-    """
-    db_axes = shard_axes if shard_axes is not None else tuple(mesh.axis_names)
-    db_axes = tuple(n for n in db_axes if n in mesh.axis_names)
-    n_shards = 1
-    for ax in db_axes:
-        n_shards *= mesh.shape[ax]
-    N = db_words.shape[0]
-    assert N % n_shards == 0, (N, n_shards)
-    shard_rows = N // n_shards
-
-    def body(q, db_shard):
-        idx = jnp.int32(0)
-        for ax in db_axes:
-            idx = idx * mesh.shape[ax] + jax.lax.axis_index(ax)
-        offset = (idx * shard_rows).astype(jnp.int32)
-        return _local_topk_then_merge(q, db_shard, offset, k, chunk, db_axes)
-
-    fn = jax_compat.shard_map(
-        body,
-        mesh=mesh,
-        in_specs=(P(), P(db_axes)),
-        out_specs=(P(), P()),
-        check_vma=False,
-    )
-    return fn(q_words, db_words)
-
-
-def make_retrieval_step(
-    mesh: Mesh,
-    k: int,
-    chunk: int = 1 << 14,
-    shard_axes: Optional[Tuple[str, ...]] = None,
-):
-    """jit-able retrieval step for serving + the production dry-run."""
-    if shard_axes is None:
-        shard_axes = tuple(mesh.axis_names)
-
-    @functools.partial(jax.jit, static_argnums=())
-    def retrieval_step(q_words, db_words):
-        return sharded_scan_topk(
-            mesh, q_words, db_words, k, chunk=chunk, shard_axes=shard_axes
-        )
-
-    in_shardings = (
-        NamedSharding(mesh, P()),
-        NamedSharding(mesh, P(shard_axes)),
-    )
-    return retrieval_step, in_shardings
+__all__ = [
+    "ShardPlan",
+    "make_retrieval_step",
+    "sharded_scan_candidates",
+    "sharded_scan_topk",
+]

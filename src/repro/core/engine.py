@@ -33,7 +33,8 @@ accounting of the paper's Eq. 13.
 from __future__ import annotations
 
 import abc
-from dataclasses import dataclass, field, fields as dc_fields
+from collections import OrderedDict
+from dataclasses import dataclass, field, fields as dc_fields, replace
 from typing import Any, ClassVar, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -70,11 +71,20 @@ class EngineStats:
     e.g. ``stats.aggregate()["verified"]`` is the batch's total candidate
     verifications. Counters that are per-query maxima (``max_radius``)
     aggregate with max, not sum.
+
+    Sharded backends additionally fill ``shards`` and ``per_shard`` (one
+    dict per shard: rows held, candidates contributed/verified, device
+    launches issued) — the serving-side view of where a batch's work
+    landed. ``cache_hits`` counts query rows answered from the engine's
+    hot-query cache without any probing (AMIHEngine's LRU).
     """
 
     backend: str
     queries: int = 0
     per_query: List[Optional[object]] = field(default_factory=list)
+    shards: int = 0
+    per_shard: List[Dict[str, int]] = field(default_factory=list)
+    cache_hits: int = 0
 
     _MAX_COUNTERS = frozenset({"max_radius"})
 
@@ -152,14 +162,24 @@ def available_backends() -> List[str]:
 def make_engine(
     backend: str, db_words: np.ndarray, p: int, **cfg: Any
 ) -> SearchEngine:
-    """Build a search engine by backend name (see ``available_backends``)."""
-    try:
-        cls = ENGINES[backend]
-    except KeyError:
+    """Build a search engine by backend name (see ``available_backends``).
+
+    The sharded backends ("sharded_scan" / "sharded_amih") live in
+    ``repro.shard`` and are registered on first use, so numpy-only
+    callers of the host backends never pay the jax import.
+    """
+    cls = ENGINES.get(backend)
+    if cls is None and backend.startswith("sharded"):
+        try:
+            from .. import shard  # noqa: F401  (registers them)
+        except ImportError:
+            pass  # no jax on this host: fall through to the ValueError
+        cls = ENGINES.get(backend)
+    if cls is None:
         raise ValueError(
             f"unknown search backend {backend!r}; "
             f"available: {available_backends()}"
-        ) from None
+        )
     return cls.build(db_words, p, **cfg)
 
 
@@ -395,14 +415,31 @@ class AMIHEngine(SearchEngine):
     enumeration before the query degrades to an exact full scan; the
     default scales with the DB like SingleTableEngine's
     (``max(8n, 16384)``) instead of a fixed constant.
+
+    Hot-query cache: serving traffic repeats query codes (hot documents,
+    retried requests), and probing + verification for a repeated packed
+    code is fully deterministic — so ``knn_batch`` memoizes per
+    (code bytes, k) in a bounded LRU (``query_cache_size`` entries,
+    0 disables). Hits skip probing entirely and are counted in
+    ``EngineStats.cache_hits`` / ``engine.cache_hits``; the cached stats
+    counters are replayed (copied) so per-query accounting stays
+    identical to an uncached run.
     """
 
     name = "amih"
 
-    def __init__(self, index: AMIHIndex, enumeration_cap):
+    def __init__(self, index: AMIHIndex, enumeration_cap,
+                 query_cache_size: int = 256):
         self.index = index
         self.p = index.p
         self.enumeration_cap = enumeration_cap
+        self.query_cache_size = query_cache_size
+        # (q_words bytes, k) -> (ids row, sims row, AMIHStats); ordered
+        # oldest-first so popitem(last=False) evicts the LRU entry.
+        self._query_cache: "OrderedDict[Tuple[bytes, int], tuple]" = (
+            OrderedDict()
+        )
+        self.cache_hits = 0
 
     @classmethod
     def build(
@@ -412,6 +449,7 @@ class AMIHEngine(SearchEngine):
         m: Optional[int] = None,
         verify_backend: str = "numpy",
         enumeration_cap: Optional[int] = None,
+        query_cache_size: int = 256,
         **cfg: Any,
     ) -> "AMIHEngine":
         if cfg:
@@ -422,7 +460,7 @@ class AMIHEngine(SearchEngine):
         index = AMIHIndex.build(
             db_words, p, m=m, verify_backend=verify_backend
         )
-        return cls(index, enumeration_cap)
+        return cls(index, enumeration_cap, query_cache_size)
 
     @property
     def n(self) -> int:
@@ -431,10 +469,50 @@ class AMIHEngine(SearchEngine):
     def knn_batch(self, q_words, k):
         q = self._check_queries(q_words, self.p)
         B = q.shape[0]
-        per_query = [AMIHStats() for _ in range(B)]
-        ids, sims = self.index.knn_batch(
-            q, k, stats=per_query, enumeration_cap=self.enumeration_cap
-        )
-        return ids, sims, EngineStats(
-            backend=self.name, queries=B, per_query=per_query
+        k_eff = min(k, self.n)
+        cache = self._query_cache if self.query_cache_size > 0 else None
+
+        # Split rows into cache hits and (deduplicated) misses. Duplicate
+        # rows inside one batch do identical probing work, so one compute
+        # serves them all — counters are copies of the computed row's,
+        # exactly what per-row computation would have produced.
+        per_query: List[Optional[AMIHStats]] = [None] * B
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        hits = 0
+        miss_keys: Dict[bytes, List[int]] = {}
+        for i in range(B):
+            key = q[i].tobytes()
+            cached = cache.get((key, k_eff)) if cache is not None else None
+            if cached is not None:
+                cache.move_to_end((key, k_eff))
+                c_ids, c_sims, c_stats = cached
+                ids_out[i], sims_out[i] = c_ids, c_sims
+                per_query[i] = replace(c_stats)
+                hits += 1
+            else:
+                miss_keys.setdefault(key, []).append(i)
+
+        if miss_keys:
+            rows = [idxs[0] for idxs in miss_keys.values()]
+            miss_stats = [AMIHStats() for _ in rows]
+            m_ids, m_sims = self.index.knn_batch(
+                q[rows], k_eff, stats=miss_stats,
+                enumeration_cap=self.enumeration_cap,
+            )
+            for j, (key, idxs) in enumerate(miss_keys.items()):
+                for i in idxs:
+                    ids_out[i], sims_out[i] = m_ids[j], m_sims[j]
+                    per_query[i] = replace(miss_stats[j])
+                if cache is not None:
+                    cache[(key, k_eff)] = (
+                        m_ids[j].copy(), m_sims[j].copy(), miss_stats[j]
+                    )
+                    while len(cache) > self.query_cache_size:
+                        cache.popitem(last=False)
+
+        self.cache_hits += hits
+        return ids_out, sims_out, EngineStats(
+            backend=self.name, queries=B, per_query=per_query,
+            cache_hits=hits,
         )

@@ -24,6 +24,7 @@ from .verify_tuples import verify_tuples_grouped as _verify_grouped_kernel
 
 __all__ = [
     "LAUNCH_COUNTS",
+    "merge_topk",
     "on_tpu",
     "pad_bucket",
     "scan_scores",
@@ -101,6 +102,7 @@ def scan_topk(
     *,
     chunk: int = 1 << 16,
     use_pallas: bool = False,
+    n_valid: jax.Array | None = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Streaming exact angular top-K: (B, W) x (N, W) -> sims, ids (B, k).
 
@@ -108,6 +110,10 @@ def scan_topk(
     (lax.scan carry), so peak memory is O(B * (k + chunk)) regardless of N.
     This is the device-side linear-scan baseline *and* the reranker of the
     distributed retrieval path.
+
+    ``n_valid`` (traced scalar) masks rows >= n_valid to -inf sims: shard
+    slices padded to a common row count (ShardPlan's device layout) scan
+    without their zero-code pad rows ever entering the top-K.
     """
     B, W = q_words.shape
     N, _ = db_words.shape
@@ -117,7 +123,10 @@ def scan_topk(
     padded_n = n_chunks * chunk
     dbp = jnp.pad(db_words, ((0, padded_n - N), (0, 0)))
     dbp = dbp.reshape(n_chunks, chunk, W)
-    base_valid = jnp.arange(padded_n).reshape(n_chunks, chunk) < N
+    row_ids = jnp.arange(padded_n).reshape(n_chunks, chunk)
+    base_valid = row_ids < N
+    if n_valid is not None:
+        base_valid = base_valid & (row_ids < n_valid)
 
     init_sims = jnp.full((B, k), -jnp.inf, dtype=jnp.float32)
     init_ids = jnp.full((B, k), -1, dtype=jnp.int32)
@@ -141,6 +150,21 @@ def scan_topk(
         (dbp, base_valid, jnp.arange(n_chunks, dtype=jnp.int32)),
     )
     return sims, ids
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def merge_topk(
+    sims: jax.Array, ids: jax.Array, k: int
+) -> Tuple[jax.Array, jax.Array]:
+    """Merge per-shard candidate pools: (B, C) sims/ids -> top-k (B, k).
+
+    C is the concatenation of every shard's local top-K (the O(K)-per-shard
+    all-gather layout of the sharded engines); invalid slots carry -inf
+    sims so they lose to every real candidate. One lax.top_k, no re-scan.
+    """
+    k = min(k, sims.shape[1])
+    best, pos = jax.lax.top_k(sims, k)
+    return best, jnp.take_along_axis(ids, pos, axis=1)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "blk", "use_pallas"))

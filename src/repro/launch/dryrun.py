@@ -151,7 +151,7 @@ def _retrieval_cell(mesh, mesh_name: str, chips: int) -> dict:
     import jax
     import jax.numpy as jnp
 
-    from repro.core.distributed import make_retrieval_step
+    from repro.shard import make_retrieval_step
     from repro.roofline.hlo_parse import parse_hlo_costs
 
     # 2^30 codes x 128 bits (SIFT-1B class), sharded over pod+data axes

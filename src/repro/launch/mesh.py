@@ -34,3 +34,13 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / small runs."""
     return _make_mesh(tuple(shape), tuple(axes))
+
+
+def make_search_mesh(num_devices=None):
+    """1-D ``data`` mesh over (up to) every local device — the layout the
+    sharded search backends (repro.shard) row-partition a DB across when
+    no model parallelism is in play. ``ShardPlan.from_mesh`` derives the
+    shard count from it."""
+    n_avail = len(jax.devices())
+    n = n_avail if num_devices is None else min(num_devices, n_avail)
+    return _make_mesh((n,), ("data",))

@@ -2,8 +2,9 @@
 
 Pipeline:  encoder LM  ->  mean-pooled hidden state  ->  AQBC binarization
            ->  exact angular KNN through the unified SearchEngine
-           (core.engine; backend selected by name)  +  device-sharded
-           linear-scan reranker for pod-scale DBs (core.distributed).
+           (core.engine; backend selected by name — including the
+           pod-scale "sharded_scan"/"sharded_amih" backends of
+           repro.shard, configured via the mesh/num_shards knobs).
 
 This is the production shape of the paper: binary hashing exists to make
 billion-item corpora searchable in RAM (paper §6.3.4); the LM zoo supplies
@@ -41,7 +42,9 @@ class RetrievalConfig:
     aqbc_iters: int = 15
     m_tables: Optional[int] = None    # None -> paper's p/log2(n)
     batch_size: int = 32              # encode batch
-    engine: str = "amih"              # core.engine backend name
+    # core.engine backend name: "amih", "linear_scan", "single_table",
+    # or the pod-scale "sharded_scan" / "sharded_amih" (repro.shard).
+    backend: str = "amih"
     # AMIH grouped candidate verification: "numpy" (one vectorized host
     # popcount per z-group/tuple-step) or "pallas" (one
     # verify_tuples_grouped launch per step over the padded
@@ -55,6 +58,19 @@ class RetrievalConfig:
     # this degrade the query to an exact scan.
     enumeration_cap: Optional[int] = None
     search_batch_size: int = 32       # queued queries per knn_batch step
+    # Sharded-backend layout knobs (repro.shard.ShardPlan): a mesh shards
+    # the sharded_scan DB across devices (shard_axes selects the mesh
+    # axes; None = all); num_shards is the host-side shard count when no
+    # mesh is given; None -> one shard per local device.
+    mesh: Optional[object] = None
+    num_shards: Optional[int] = None
+    shard_axes: Optional[Tuple[str, ...]] = None
+
+    @property
+    def engine(self) -> str:
+        """Pre-shard name of ``backend``, kept for callers of the old
+        field."""
+        return self.backend
 
 
 @dataclass
@@ -140,19 +156,33 @@ class RetrievalService:
         self.rotation = model.rotation
         bits = np.asarray(aqbc.encode(jnp.asarray(x), self.rotation))
         self.db_words = pack_bits(bits)
+        shard_cfg: Dict[str, object] = {
+            "mesh": self.rcfg.mesh,
+            "num_shards": self.rcfg.num_shards,
+            "shard_axes": self.rcfg.shard_axes,
+        }
         cfg: Dict[str, object] = {}
-        if self.rcfg.engine == "amih":
+        if self.rcfg.backend == "amih":
             cfg = {
                 "m": self.rcfg.m_tables,
                 "verify_backend": self.rcfg.verify_backend,
                 "enumeration_cap": self.rcfg.enumeration_cap,
             }
-        elif self.rcfg.engine == "linear_scan":
+        elif self.rcfg.backend == "linear_scan":
             cfg = {"compute_backend": self.rcfg.compute_backend}
-        elif self.rcfg.engine == "single_table":
+        elif self.rcfg.backend == "single_table":
             cfg = {"enumeration_cap": self.rcfg.enumeration_cap}
+        elif self.rcfg.backend == "sharded_scan":
+            cfg = shard_cfg
+        elif self.rcfg.backend == "sharded_amih":
+            cfg = {
+                **shard_cfg,
+                "m": self.rcfg.m_tables,
+                "verify_backend": self.rcfg.verify_backend,
+                "enumeration_cap": self.rcfg.enumeration_cap,
+            }
         self.engine = make_engine(
-            self.rcfg.engine, self.db_words, self.rcfg.code_bits, **cfg
+            self.rcfg.backend, self.db_words, self.rcfg.code_bits, **cfg
         )
         index = getattr(self.engine, "index", None)
         return {

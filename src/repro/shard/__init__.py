@@ -1,0 +1,31 @@
+"""Sharded search subsystem: pod-scale DBs behind the unified engine API.
+
+Layout:
+  - plan.py        — ShardPlan: balanced row partition + global-id offsets
+                     + serializable summary (the layout contract).
+  - distributed.py — device-sharded scan primitives (shard_map + O(K)
+                     all-gather merge), absorbed from core/distributed.
+  - engines.py     — "sharded_scan" / "sharded_amih" SearchEngine
+                     backends, registered on import.
+
+``make_engine("sharded_scan" | "sharded_amih", ...)`` imports this
+package on demand (see core.engine.make_engine), so host-only callers
+never pay for it.
+"""
+
+from .distributed import (
+    make_retrieval_step,
+    sharded_scan_candidates,
+    sharded_scan_topk,
+)
+from .engines import ShardedAMIHEngine, ShardedScanEngine
+from .plan import ShardPlan
+
+__all__ = [
+    "ShardPlan",
+    "ShardedAMIHEngine",
+    "ShardedScanEngine",
+    "make_retrieval_step",
+    "sharded_scan_candidates",
+    "sharded_scan_topk",
+]

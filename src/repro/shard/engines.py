@@ -1,0 +1,369 @@
+"""Sharded SearchEngine backends: pod-scale DBs behind the same knn_batch.
+
+Both backends consume a ``ShardPlan`` (row partition with per-shard
+global-id offsets) and register in the core engine registry, so
+
+    make_engine("sharded_scan", db, p, mesh=mesh)          # device-sharded
+    make_engine("sharded_amih", db, p, num_shards=8)       # host-sharded
+
+work unchanged for every caller of the unified API. Both are EXACT: sims
+returned are bit-identical to per-query ``linear_scan_knn`` (up to ties
+inside one Hamming tuple), including N not divisible by the shard count
+and K larger than a shard's row count.
+
+  - "sharded_scan": every shard runs the streaming device top-K
+    (``kernels/ops.scan_topk``) over its row slice and contributes its
+    local top-``k_fetch`` to a candidate pool — with a mesh, as ONE
+    shard_map launch whose O(K)-per-shard partials are all-gathered
+    (``sharded_scan_candidates``); without one, as a host loop over
+    per-shard device slices. The pooled candidates are re-scored on host
+    in exact float64 (``sims_for_ids``) and re-ranked, the same
+    preselect-then-rerank contract as LinearScanEngine's pallas path.
+
+  - "sharded_amih": each shard owns an ``AMIHIndex`` over its row slice
+    (built with ``id_offset`` so emitted ids are global). Shards are
+    probed in sequence; after each, the pooled k-th best cosine becomes
+    the next shard's ``stop_below`` bound — a shard stops probing the
+    moment its tuple sequence's sim drops below the global k-th
+    (``AMIHIndex.knn_batch_bounded``), the cross-shard form of the
+    paper's early-termination rule. Per-shard exact top-K lists merge by
+    one lexsort into the global top-K.
+
+``EngineStats`` gains the shard view: ``stats.shards`` and one
+``stats.per_shard`` dict per shard (rows held, candidates/verifications
+contributed, device launches, early stops).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.amih import AMIHIndex, AMIHStats
+from ..core.engine import EngineStats, SearchEngine, register_engine
+from ..core.linear_scan import sims_for_ids
+from ..core.packing import WORD_DTYPE
+from ..core.single_table import SearchStats
+from .plan import ShardPlan
+
+__all__ = ["ShardedAMIHEngine", "ShardedScanEngine"]
+
+
+def _resolve_plan(
+    db_words: np.ndarray,
+    mesh,
+    num_shards: Optional[int],
+    shard_axes,
+    plan: Optional[ShardPlan],
+) -> ShardPlan:
+    """One plan from whichever knob the caller provided (plan > mesh >
+    num_shards > one shard per local device)."""
+    n = np.asarray(db_words).shape[0]
+    if plan is not None:
+        if plan.n != n:
+            raise ValueError(f"plan covers n={plan.n}, DB has n={n}")
+        return plan
+    if mesh is not None:
+        return ShardPlan.from_mesh(mesh, n, shard_axes=shard_axes)
+    if num_shards is None:
+        import jax
+
+        num_shards = max(1, len(jax.devices()))
+    return ShardPlan.balanced(n, num_shards)
+
+
+def _preselect_slack(p: int) -> int:
+    # Same float32 selection-boundary slack as LinearScanEngine._topk_slack:
+    # distinct Eq. 3 sims stay resolvable in float32 up to p ~ 192; beyond,
+    # the slack grows so a collapsed boundary population still fits.
+    return 16 + max(0, p - 128) // 4
+
+
+def _count_per_shard(plan: ShardPlan, gids: np.ndarray) -> List[int]:
+    """How many candidate ids fall in each shard's global-id range."""
+    edges = np.asarray(plan.starts[1:], dtype=np.int64)
+    owner = np.searchsorted(edges, gids, side="right")
+    return np.bincount(owner, minlength=plan.num_shards).tolist()
+
+
+@register_engine
+class ShardedScanEngine(SearchEngine):
+    """Exhaustive scan over a row-sharded DB: per-shard device top-K
+    preselect, O(K)-per-shard gather, exact float64 host rerank."""
+
+    name = "sharded_scan"
+
+    def __init__(self, db_words, p, plan, mesh, chunk):
+        self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
+        self.p = p
+        self.plan = plan
+        self.mesh = mesh
+        self.chunk = chunk
+        self.shard_launches = 0
+        self._db_dev = None          # mesh mode: padded layout, row-sharded
+        self._shard_dev: List[Any] = []   # host mode: per-shard slices
+
+    @classmethod
+    def build(
+        cls,
+        db_words: np.ndarray,
+        p: int,
+        mesh=None,
+        num_shards: Optional[int] = None,
+        shard_axes: Optional[Tuple[str, ...]] = None,
+        plan: Optional[ShardPlan] = None,
+        chunk: int = 1 << 14,
+        **cfg: Any,
+    ) -> "ShardedScanEngine":
+        if cfg:
+            raise TypeError(f"unknown sharded_scan options: {sorted(cfg)}")
+        plan = _resolve_plan(db_words, mesh, num_shards, shard_axes, plan)
+        return cls(db_words, p, plan, mesh, chunk)
+
+    @property
+    def n(self) -> int:
+        return self.db_words.shape[0]
+
+    def knn_batch(self, q_words, k):
+        q = self._check_queries(q_words, self.p)
+        B = q.shape[0]
+        k_eff = min(k, self.n)
+        if k_eff == 0:
+            return (
+                np.empty((B, 0), np.int64), np.empty((B, 0), np.float64),
+                EngineStats(backend=self.name, queries=B,
+                            per_query=[SearchStats() for _ in range(B)],
+                            shards=self.plan.num_shards),
+            )
+        from ..kernels import ops
+
+        k_fetch = min(
+            self.plan.rows_padded,
+            ops.pad_bucket(k_eff + _preselect_slack(self.p), minimum=8),
+        )
+        if self.mesh is not None:
+            pool_sims, pool_gids = self._candidates_mesh(q, k_fetch)
+        else:
+            pool_sims, pool_gids = self._candidates_host(q, k_fetch)
+
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        cand_total = 0
+        shard_counts = np.zeros(self.plan.num_shards, dtype=np.int64)
+        for i in range(B):
+            cand = pool_gids[i][pool_gids[i] >= 0].astype(np.int64)
+            cand_total += cand.size
+            shard_counts += np.asarray(_count_per_shard(self.plan, cand))
+            sub = sims_for_ids(q[i], self.db_words, cand)  # exact float64
+            order = np.lexsort((cand, -sub))[:k_eff]
+            ids_out[i] = cand[order]
+            sims_out[i] = sub[order]
+        self.shard_launches += self.plan.num_shards
+        per_shard = [
+            {
+                "shard": s,
+                "rows": self.plan.counts[s],
+                "candidates": int(shard_counts[s]),
+                "launches": 1,
+            }
+            for s in range(self.plan.num_shards)
+        ]
+        stats = EngineStats(
+            backend=self.name, queries=B,
+            per_query=[SearchStats(retrieved=self.n) for _ in range(B)],
+            shards=self.plan.num_shards, per_shard=per_shard,
+        )
+        return ids_out, sims_out, stats
+
+    # ------------------------------------------------------------ mesh mode
+    def _candidates_mesh(self, q, k_fetch):
+        """One shard_map launch: per-device scan + O(K) all-gather."""
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        from ..kernels import ops
+        from .distributed import sharded_scan_candidates
+
+        if self._db_dev is None:
+            axes = self.plan.axis_names or tuple(self.mesh.axis_names)
+            self._db_dev = jax.device_put(
+                self.plan.padded_layout(self.db_words),
+                NamedSharding(self.mesh, P(axes)),
+            )
+        B = q.shape[0]
+        Bp = ops.pad_bucket(B, minimum=8)
+        qp = np.zeros((Bp, q.shape[1]), dtype=q.dtype)
+        qp[:B] = q
+        sims, gids = sharded_scan_candidates(
+            self.mesh, jnp.asarray(qp), self._db_dev, self.plan, k_fetch,
+            chunk=self.chunk,
+        )
+        return np.asarray(sims)[:B], np.asarray(gids)[:B]
+
+    # ------------------------------------------------------------ host mode
+    def _candidates_host(self, q, k_fetch):
+        """No mesh: walk the shards on the default device, same math."""
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+
+        if not self._shard_dev:
+            self._shard_dev = [
+                jnp.asarray(self.db_words[self.plan.shard_slice(s)])
+                for s in range(self.plan.num_shards)
+            ]
+        B = q.shape[0]
+        Bp = ops.pad_bucket(B, minimum=8)
+        qp = np.zeros((Bp, q.shape[1]), dtype=q.dtype)
+        qp[:B] = q
+        qj = jnp.asarray(qp)
+        sims_parts, gid_parts = [], []
+        for s in range(self.plan.num_shards):
+            count = self.plan.counts[s]
+            if count == 0:
+                continue
+            sims, ids = ops.scan_topk(
+                qj, self._shard_dev[s], min(k_fetch, count),
+                chunk=self.chunk, use_pallas=ops.on_tpu(),
+            )
+            sims = np.asarray(sims)[:B]
+            gids = np.asarray(ids)[:B].astype(np.int64)
+            gids = np.where(sims > -np.inf, gids + self.plan.starts[s], -1)
+            sims_parts.append(sims)
+            gid_parts.append(gids)
+        return (
+            np.concatenate(sims_parts, axis=1),
+            np.concatenate(gid_parts, axis=1),
+        )
+
+
+@register_engine
+class ShardedAMIHEngine(SearchEngine):
+    """AMIH over a row-sharded DB: one shard-local index per slice,
+    sequential probing with the pooled k-th cosine as each next shard's
+    early-termination bound, exact lexsort merge."""
+
+    name = "sharded_amih"
+
+    def __init__(self, db_words, p, plan, indexes, enumeration_cap):
+        self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
+        self.p = p
+        self.plan = plan
+        self.indexes = indexes      # [(shard_id, AMIHIndex)] non-empty shards
+        self.enumeration_cap = enumeration_cap
+
+    @classmethod
+    def build(
+        cls,
+        db_words: np.ndarray,
+        p: int,
+        mesh=None,
+        num_shards: Optional[int] = None,
+        shard_axes: Optional[Tuple[str, ...]] = None,
+        plan: Optional[ShardPlan] = None,
+        m: Optional[int] = None,
+        verify_backend: str = "numpy",
+        enumeration_cap: Optional[int] = None,
+        **cfg: Any,
+    ) -> "ShardedAMIHEngine":
+        if cfg:
+            raise TypeError(f"unknown sharded_amih options: {sorted(cfg)}")
+        db = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
+        plan = _resolve_plan(db, mesh, num_shards, shard_axes, plan)
+        indexes = []
+        for s in range(plan.num_shards):
+            if plan.counts[s] == 0:
+                continue
+            indexes.append((s, AMIHIndex.build(
+                db[plan.shard_slice(s)], p, m=m,
+                verify_backend=verify_backend, id_offset=plan.starts[s],
+            )))
+        return cls(db, p, plan, indexes, enumeration_cap)
+
+    @property
+    def n(self) -> int:
+        return self.db_words.shape[0]
+
+    def knn_batch(self, q_words, k):
+        q = self._check_queries(q_words, self.p)
+        B = q.shape[0]
+        k_eff = min(k, self.n)
+        per_query = [AMIHStats() for _ in range(B)]
+        if k_eff == 0:
+            return (
+                np.empty((B, 0), np.int64), np.empty((B, 0), np.float64),
+                EngineStats(backend=self.name, queries=B,
+                            per_query=per_query,
+                            shards=self.plan.num_shards),
+            )
+        per_shard: List[Dict[str, int]] = []
+        gid_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
+        sim_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
+        bounds = np.full(B, -np.inf)
+
+        for s, index in self.indexes:
+            local_k = min(k_eff, index.n)
+            shard_stats = [AMIHStats() for _ in range(B)]
+            launches0 = index.verify_launches
+            results = index.knn_batch_bounded(
+                q, k_eff, stop_below=bounds, stats=shard_stats,
+                enumeration_cap=self.enumeration_cap,
+            )
+            early_stopped = 0
+            for i, (r_ids, r_sims) in enumerate(results):
+                if r_ids.size < local_k:
+                    early_stopped += 1
+                if r_ids.size:
+                    gid_parts[i].append(r_ids)
+                    sim_parts[i].append(r_sims)
+                total = sum(a.size for a in sim_parts[i])
+                if total >= k_eff:
+                    pool = np.concatenate(sim_parts[i]) if \
+                        len(sim_parts[i]) > 1 else sim_parts[i][0]
+                    # pooled k-th best cosine: sims strictly below it can
+                    # never enter the global top-K of query i
+                    bounds[i] = np.partition(pool, total - k_eff)[
+                        total - k_eff
+                    ]
+                self._fold_stats(per_query[i], shard_stats[i])
+            agg: Dict[str, int] = {
+                "shard": s,
+                "rows": index.n,
+                "launches": index.verify_launches - launches0,
+                "early_stopped": early_stopped,
+            }
+            for counter in ("probes", "retrieved", "verified",
+                            "tuples_processed", "fell_back_to_scan"):
+                agg[counter] = sum(
+                    int(getattr(st, counter)) for st in shard_stats
+                )
+            per_shard.append(agg)
+
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        for i in range(B):
+            gids = np.concatenate(gid_parts[i]) if gid_parts[i] \
+                else np.empty(0, dtype=np.int64)
+            sims = np.concatenate(sim_parts[i]) if sim_parts[i] \
+                else np.empty(0, dtype=np.float64)
+            order = np.lexsort((gids, -sims))[:k_eff]
+            ids_out[i] = gids[order]
+            sims_out[i] = sims[order]
+        stats = EngineStats(
+            backend=self.name, queries=B, per_query=per_query,
+            shards=self.plan.num_shards, per_shard=per_shard,
+        )
+        return ids_out, sims_out, stats
+
+    @staticmethod
+    def _fold_stats(into: AMIHStats, src: AMIHStats) -> None:
+        into.probes += src.probes
+        into.retrieved += src.retrieved
+        into.verified += src.verified
+        into.tuples_processed += src.tuples_processed
+        into.substring_tuples_probed += src.substring_tuples_probed
+        into.max_radius = max(into.max_radius, src.max_radius)
+        into.exceeded_rhat |= src.exceeded_rhat
+        into.fell_back_to_scan |= src.fell_back_to_scan

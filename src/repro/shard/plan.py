@@ -1,0 +1,149 @@
+"""ShardPlan: the row-partition layout of a pod-scale packed-code DB.
+
+One plan answers every layout question the sharded engines ask:
+
+  - which global rows shard ``s`` holds (balanced remainder: shard sizes
+    differ by at most one row, never a trailing empty shard),
+  - the per-shard global-id offset (``starts[s]``) that turns a shard's
+    local row index into a DB-wide id,
+  - the common padded row count (``rows_padded``) of the device layout —
+    every shard occupies an equal-size slice of a (S * rows_padded, W)
+    array so the mesh can shard it evenly; pad rows are zero codes that
+    the scan masks out via per-shard ``counts``,
+  - a JSON-serializable ``summary()`` (and ``from_summary`` inverse) so a
+    serving fleet can ship the layout next to the checkpoint.
+
+Plans are mesh-agnostic: ``balanced(n, num_shards)`` covers host-side
+sharding (one process walking the shards), ``from_mesh(mesh, n)`` derives
+the shard count from the mesh axes the DB rows are split over (the
+``pod``/``data`` axes of the production meshes — any mesh axis works).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+__all__ = ["ShardPlan", "resolve_mesh_axes"]
+
+
+def resolve_mesh_axes(mesh, shard_axes=None):
+    """(axes, n_shards) for the mesh axes DB rows shard across: the
+    requested axes filtered to ones the mesh has (default: every mesh
+    axis), and the product of their sizes. The single source of this
+    rule — used by both ShardPlan.from_mesh and the shard_map bodies in
+    shard/distributed.py, which must agree on the shard count."""
+    axes = tuple(shard_axes) if shard_axes is not None \
+        else tuple(mesh.axis_names)
+    axes = tuple(a for a in axes if a in mesh.axis_names)
+    n_shards = 1
+    for a in axes:
+        n_shards *= mesh.shape[a]
+    return axes, n_shards
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """Balanced row partition of ``n`` DB rows into ``num_shards`` shards."""
+
+    n: int
+    starts: Tuple[int, ...]
+    counts: Tuple[int, ...]
+    axis_names: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if len(self.starts) != len(self.counts) or not self.starts:
+            raise ValueError("starts/counts must be equal-length, non-empty")
+        if sum(self.counts) != self.n:
+            raise ValueError(
+                f"counts sum to {sum(self.counts)}, expected n={self.n}"
+            )
+
+    # ------------------------------------------------------------ builders
+    @classmethod
+    def balanced(
+        cls,
+        n: int,
+        num_shards: int,
+        axis_names: Tuple[str, ...] = (),
+    ) -> "ShardPlan":
+        """Partition ``n`` rows into ``num_shards`` contiguous slices whose
+        sizes differ by at most one (the first ``n % num_shards`` shards
+        take the extra row)."""
+        if num_shards < 1:
+            raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+        base, rem = divmod(n, num_shards)
+        counts = tuple(
+            base + (1 if s < rem else 0) for s in range(num_shards)
+        )
+        starts = tuple(int(x) for x in np.cumsum((0,) + counts[:-1]))
+        return cls(n=n, starts=starts, counts=counts,
+                   axis_names=tuple(axis_names))
+
+    @classmethod
+    def from_mesh(
+        cls,
+        mesh,
+        n: int,
+        shard_axes: Optional[Tuple[str, ...]] = None,
+    ) -> "ShardPlan":
+        """Plan over the product of the mesh axes the DB rows shard across
+        (default: every mesh axis, matching ``sharded_scan_topk``)."""
+        axes, num_shards = resolve_mesh_axes(mesh, shard_axes)
+        if not axes:
+            raise ValueError(
+                f"no shard axes among mesh axes {tuple(mesh.axis_names)}"
+            )
+        return cls.balanced(n, num_shards, axis_names=axes)
+
+    # ------------------------------------------------------------ geometry
+    @property
+    def num_shards(self) -> int:
+        return len(self.counts)
+
+    @property
+    def rows_padded(self) -> int:
+        """Common per-shard row count of the padded device layout."""
+        return max(self.counts) if self.counts else 0
+
+    def shard_slice(self, s: int) -> slice:
+        return slice(self.starts[s], self.starts[s] + self.counts[s])
+
+    def global_ids(self, s: int, local_ids: np.ndarray) -> np.ndarray:
+        return np.asarray(local_ids) + self.starts[s]
+
+    def padded_layout(self, db_words: np.ndarray) -> np.ndarray:
+        """(n, W) -> (num_shards * rows_padded, W): shard ``s`` occupies
+        rows [s * rows_padded, (s+1) * rows_padded), its real rows first,
+        zero-code pad rows after. This is the array a mesh row-shards
+        evenly; the scan masks pads via ``counts`` (``scan_topk
+        n_valid``), so they never reach a top-K."""
+        db = np.asarray(db_words)
+        R = self.rows_padded
+        out = np.zeros((self.num_shards * R,) + db.shape[1:], dtype=db.dtype)
+        for s in range(self.num_shards):
+            out[s * R : s * R + self.counts[s]] = db[self.shard_slice(s)]
+        return out
+
+    # -------------------------------------------------------- serialization
+    def summary(self) -> Dict[str, object]:
+        """JSON-serializable description (round-trips via from_summary)."""
+        return {
+            "n": self.n,
+            "num_shards": self.num_shards,
+            "rows_padded": self.rows_padded,
+            "starts": list(self.starts),
+            "counts": list(self.counts),
+            "axis_names": list(self.axis_names),
+        }
+
+    @classmethod
+    def from_summary(cls, d: Dict[str, object]) -> "ShardPlan":
+        return cls(
+            n=int(d["n"]),
+            starts=tuple(int(x) for x in d["starts"]),
+            counts=tuple(int(x) for x in d["counts"]),
+            axis_names=tuple(d.get("axis_names", ())),
+        )

@@ -239,6 +239,63 @@ def test_linear_scan_pallas_uploads_db_once():
     assert eng._db_dev is dev0
 
 
+def test_amih_query_cache_hits_and_exactness():
+    """Repeated query codes are served from the engine's LRU without
+    probing; results and per-query counters are identical to a cold run."""
+    p, n, B, k = 64, 400, 8, 10
+    db_bits = synthetic_binary_codes(n, p, seed=40)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=41))
+    db = pack_bits(db_bits)
+    eng = make_engine("amih", db, p)
+    ids1, sims1, st1 = eng.knn_batch(qs, k)
+    assert st1.cache_hits == 0 and eng.cache_hits == 0
+    ids2, sims2, st2 = eng.knn_batch(qs, k)
+    assert st2.cache_hits == B and eng.cache_hits == B
+    np.testing.assert_array_equal(ids1, ids2)
+    np.testing.assert_array_equal(sims1, sims2)
+    # replayed stats equal the computed ones, per query
+    assert [s for s in st1.per_query] == [s for s in st2.per_query]
+    # a different k is a different cache entry (misses once, then hits)
+    _, _, st3 = eng.knn_batch(qs, k + 1)
+    assert st3.cache_hits == 0
+    _, _, st4 = eng.knn_batch(qs, k + 1)
+    assert st4.cache_hits == B
+
+
+def test_amih_query_cache_dedups_within_batch():
+    p, n = 64, 200
+    db_bits = synthetic_binary_codes(n, p, seed=42)
+    qs = pack_bits(synthetic_queries(db_bits, 2, seed=43))
+    batch = np.concatenate([qs, qs[0:1], qs[1:2]])   # rows 2,3 duplicate 0,1
+    db = pack_bits(db_bits)
+    eng = make_engine("amih", db, p)
+    ids, sims, stats = eng.knn_batch(batch, 5)
+    np.testing.assert_array_equal(ids[2], ids[0])
+    np.testing.assert_array_equal(sims[3], sims[1])
+    assert stats.per_query[2] == stats.per_query[0]
+    # results identical to an uncached engine
+    eng0 = make_engine("amih", db, p, query_cache_size=0)
+    ids0, sims0, st0 = eng0.knn_batch(batch, 5)
+    np.testing.assert_array_equal(ids, ids0)
+    np.testing.assert_array_equal(sims, sims0)
+    assert eng0.cache_hits == 0
+    _, _, st0b = eng0.knn_batch(batch, 5)
+    assert st0b.cache_hits == 0                     # disabled stays cold
+
+
+def test_amih_query_cache_lru_bound():
+    p, n = 64, 150
+    db_bits = synthetic_binary_codes(n, p, seed=44)
+    qs = pack_bits(synthetic_queries(db_bits, 6, seed=45))
+    db = pack_bits(db_bits)
+    eng = make_engine("amih", db, p, query_cache_size=4)
+    eng.knn_batch(qs, 3)                            # 6 misses -> 2 evicted
+    assert len(eng._query_cache) == 4
+    _, _, stats = eng.knn_batch(qs, 3)
+    # the two oldest rows were evicted, the four newest hit
+    assert stats.cache_hits == 4
+
+
 def test_amih_enumeration_cap_default_scales_with_n():
     """AMIH's default cap matches SingleTableEngine's max(8n, 16384)
     instead of a hardcoded constant."""

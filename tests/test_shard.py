@@ -1,0 +1,261 @@
+"""The sharded search subsystem (repro.shard): ShardPlan layout contract,
+host- and mesh-mode engine exactness vs ``linear_scan_knn`` (uneven N,
+K > per-shard rows, B in {1, 8, 64}), cross-shard early termination,
+per-shard EngineStats, and the Optional-annotation regression of the old
+``core.distributed`` module (multi-device cases run in subprocesses with
+8 fake CPU devices, the tests/test_distributed.py pattern)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+import typing
+
+import numpy as np
+import pytest
+
+from repro.core import linear_scan_knn, make_engine, pack_bits
+from repro.core.linear_scan import sims_against_db
+from repro.data import synthetic_binary_codes, synthetic_queries
+from repro.shard import ShardPlan
+
+
+def _run(code: str, devices: int = 8) -> str:
+    prelude = textwrap.dedent(f"""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={devices}"
+        import sys
+        sys.path.insert(0, "src")
+        import jax, jax.numpy as jnp
+        import numpy as np
+    """)
+    out = subprocess.run(
+        [sys.executable, "-c", prelude + textwrap.dedent(code)],
+        capture_output=True, text=True, cwd="/root/repo", timeout=560,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def _check_exact(ids, sims, qs, db, k_eff):
+    """Sharded results == per-query linear scan, up to in-tuple ties."""
+    B = qs.shape[0]
+    assert ids.shape == (B, k_eff) and sims.shape == (B, k_eff)
+    for i in range(B):
+        _, sims_l = linear_scan_knn(qs[i], db, k_eff)
+        np.testing.assert_array_equal(sims[i], sims_l)
+        all_sims = sims_against_db(qs[i], db)
+        np.testing.assert_array_equal(all_sims[ids[i]], sims[i])
+        assert len(set(ids[i].tolist())) == k_eff  # shards are disjoint
+
+
+# --------------------------------------------------------------- ShardPlan
+def test_plan_balanced_remainder():
+    plan = ShardPlan.balanced(10, 8)
+    assert plan.counts == (2, 2, 1, 1, 1, 1, 1, 1)   # differ by <= 1
+    assert plan.starts == (0, 2, 4, 5, 6, 7, 8, 9)
+    assert plan.rows_padded == 2
+    assert plan.num_shards == 8
+    # slices tile [0, n) exactly
+    rows = np.concatenate(
+        [np.arange(plan.n)[plan.shard_slice(s)] for s in range(8)]
+    )
+    np.testing.assert_array_equal(rows, np.arange(10))
+    assert plan.global_ids(3, np.arange(plan.counts[3])).tolist() == [5]
+
+
+def test_plan_summary_roundtrip_is_json():
+    plan = ShardPlan.balanced(1001, 7, axis_names=("pod", "data"))
+    wire = json.dumps(plan.summary())          # serializable by contract
+    assert ShardPlan.from_summary(json.loads(wire)) == plan
+    s = plan.summary()
+    assert s["num_shards"] == 7 and s["rows_padded"] == 143
+
+
+def test_plan_padded_layout_masks_remainder():
+    db = 1 + np.arange(10 * 3, dtype=np.uint32).reshape(10, 3)
+    plan = ShardPlan.balanced(10, 4)           # counts (3, 3, 2, 2)
+    padded = plan.padded_layout(db)
+    assert padded.shape == (12, 3)
+    for s in range(4):
+        lo = s * plan.rows_padded
+        np.testing.assert_array_equal(
+            padded[lo : lo + plan.counts[s]], db[plan.shard_slice(s)]
+        )
+    # the two remainder slots (shards 2 and 3) are zero codes
+    assert not padded[2 * 3 + 2].any() and not padded[3 * 3 + 2].any()
+
+
+def test_plan_validation():
+    with pytest.raises(ValueError, match="num_shards"):
+        ShardPlan.balanced(10, 0)
+    with pytest.raises(ValueError, match="counts sum"):
+        ShardPlan(n=5, starts=(0, 2), counts=(2, 2))
+
+
+# ------------------------------------------- host-mode engines (1 device)
+@pytest.mark.parametrize("backend", ["sharded_scan", "sharded_amih"])
+@pytest.mark.parametrize("B", [1, 8, 64])
+def test_sharded_exact_uneven_n(backend, B):
+    p, n, k, S = 64, 997, 10, 8                # N not divisible by shards
+    db_bits = synthetic_binary_codes(n, p, seed=0)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=1))
+    eng = make_engine(backend, db, p, num_shards=S)
+    ids, sims, stats = eng.knn_batch(qs, k)
+    _check_exact(ids, sims, qs, db, k)
+    assert stats.backend == backend and stats.queries == B
+    assert stats.shards == S and len(stats.per_shard) == S
+    assert sum(d["rows"] for d in stats.per_shard) == n
+
+
+@pytest.mark.parametrize("backend", ["sharded_scan", "sharded_amih"])
+def test_sharded_k_exceeds_shard_rows(backend):
+    # K > every shard's row count: each shard must surface its whole slice
+    p, n, k, S = 64, 50, 40, 8                 # ~6 rows/shard, k=40
+    db_bits = synthetic_binary_codes(n, p, seed=2)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, 4, seed=3))
+    eng = make_engine(backend, db, p, num_shards=S)
+    ids, sims, _ = eng.knn_batch(qs, k)
+    _check_exact(ids, sims, qs, db, k)
+    # k > n clamps too
+    ids, sims, _ = eng.knn_batch(qs, 99)
+    _check_exact(ids, sims, qs, db, n)
+
+
+def test_sharded_more_shards_than_rows():
+    p, n = 64, 5
+    db_bits = synthetic_binary_codes(n, p, seed=4)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, 2, seed=5))
+    for backend in ("sharded_scan", "sharded_amih"):
+        ids, sims, _ = make_engine(backend, db, p, num_shards=8).knn_batch(
+            qs, 3
+        )
+        _check_exact(ids, sims, qs, db, 3)
+
+
+def test_sharded_amih_early_termination_bounds_global_kth():
+    """Later shards stop probing once the pooled k-th cosine bounds them:
+    their tuples_processed collapses vs an unbounded per-shard run, and
+    per_shard counts the early-stopped queries."""
+    p, n, B, k, S = 64, 2000, 8, 5, 8
+    db_bits = synthetic_binary_codes(n, p, seed=6)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=7))
+    eng = make_engine("sharded_amih", db, p, num_shards=S)
+    ids, sims, stats = eng.knn_batch(qs, k)
+    _check_exact(ids, sims, qs, db, k)
+    assert any(d["early_stopped"] > 0 for d in stats.per_shard[1:])
+    # an unbounded run of the last shard does strictly more tuple work
+    _, last_index = eng.indexes[-1]
+    bounded_tuples = stats.per_shard[-1]["tuples_processed"]
+    from repro.core import AMIHStats
+
+    free_stats = [AMIHStats() for _ in range(B)]
+    last_index.knn_batch(qs, k, stats=free_stats)
+    unbounded_tuples = sum(s.tuples_processed for s in free_stats)
+    assert bounded_tuples < unbounded_tuples
+
+
+def test_sharded_amih_ids_are_global():
+    p, n, S = 64, 300, 4
+    db_bits = synthetic_binary_codes(n, p, seed=8)
+    db = pack_bits(db_bits)
+    eng = make_engine("sharded_amih", db, p, num_shards=S)
+    for s, index in eng.indexes:
+        assert index.id_offset == eng.plan.starts[s]
+    # a query equal to a code in the LAST shard must return its global id
+    target = n - 3
+    q = db[target : target + 1]
+    ids, sims, _ = eng.knn_batch(q, 1)
+    assert ids[0, 0] == target
+    assert sims[0, 0] == sims_against_db(q[0], db)[target]
+
+
+def test_sharded_scan_per_shard_candidate_counters():
+    p, n, S = 64, 640, 4
+    db_bits = synthetic_binary_codes(n, p, seed=9)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, 8, seed=10))
+    eng = make_engine("sharded_scan", db, p, num_shards=S)
+    _, _, stats = eng.knn_batch(qs, 7)
+    assert [d["shard"] for d in stats.per_shard] == list(range(S))
+    assert all(d["launches"] == 1 for d in stats.per_shard)
+    assert sum(d["candidates"] for d in stats.per_shard) > 0
+    assert eng.shard_launches == S
+    eng.knn_batch(qs, 7)
+    assert eng.shard_launches == 2 * S
+
+
+def test_plan_knob_passes_through_make_engine():
+    p, n = 64, 100
+    db_bits = synthetic_binary_codes(n, p, seed=11)
+    db = pack_bits(db_bits)
+    plan = ShardPlan.balanced(n, 3)
+    eng = make_engine("sharded_scan", db, p, plan=plan)
+    assert eng.plan is plan
+    with pytest.raises(ValueError, match="plan covers"):
+        make_engine("sharded_scan", db, p, plan=ShardPlan.balanced(n + 1, 3))
+
+
+# ------------------------------------------------- annotation regression
+def test_distributed_annotations_resolve():
+    """Regression: ``shard_axes: Optional[...]`` used to reference an
+    un-imported Optional (hidden by ``from __future__ import
+    annotations`` until something resolved the hints)."""
+    from repro.core import distributed as legacy
+    from repro.shard import distributed as shard_dist
+
+    for fn in (
+        shard_dist.sharded_scan_topk,
+        shard_dist.make_retrieval_step,
+        legacy.sharded_scan_topk,            # the shim re-export
+    ):
+        hints = typing.get_type_hints(fn)
+        assert "shard_axes" in hints
+
+
+# ---------------------------------------------- mesh mode (8 fake devices)
+def test_sharded_engines_match_linear_scan_on_mesh():
+    _run("""
+        from repro.core import make_engine, linear_scan_knn, pack_bits
+        from repro.data import synthetic_binary_codes, synthetic_queries
+        from repro.launch.mesh import make_mesh, make_search_mesh
+
+        p, n, k = 64, 4093, 25               # prime N: uneven everywhere
+        db_bits = synthetic_binary_codes(n, p, seed=0)
+        db = pack_bits(db_bits)
+        mesh = make_mesh((4, 2), ("data", "model"))
+        eng = make_engine("sharded_scan", db, p, mesh=mesh, chunk=256)
+        assert eng.plan.num_shards == 8
+        amih = make_engine("sharded_amih", db, p, mesh=mesh)
+        for B in (1, 8, 64):
+            qs = pack_bits(synthetic_queries(db_bits, B, seed=B))
+            for e in (eng, amih):
+                ids, sims, stats = e.knn_batch(qs, k)
+                assert stats.shards == 8
+                for i in range(B):
+                    ids_l, sims_l = linear_scan_knn(qs[i], db, k)
+                    np.testing.assert_array_equal(sims[i], sims_l)
+
+        # K > per-shard rows (512 rows/shard, K pool spans shards)
+        small = pack_bits(db_bits[:40])
+        eng_s = make_engine("sharded_scan", small, p, mesh=mesh, chunk=8)
+        qs = pack_bits(synthetic_queries(db_bits, 4, seed=99))
+        ids, sims, _ = eng_s.knn_batch(qs, 30)
+        for i in range(4):
+            _, sims_l = linear_scan_knn(qs[i], small, 30)
+            np.testing.assert_array_equal(sims[i], sims_l)
+
+        # the 1-D search mesh helper spans all fake devices
+        smesh = make_search_mesh()
+        eng_m = make_engine("sharded_scan", db, p, mesh=smesh, chunk=256)
+        assert eng_m.plan.num_shards == 8
+        ids, sims, _ = eng_m.knn_batch(qs[:2], 10)
+        for i in range(2):
+            _, sims_l = linear_scan_knn(qs[i], db, 10)
+            np.testing.assert_array_equal(sims[i], sims_l)
+        print("OK")
+    """)

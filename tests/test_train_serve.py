@@ -267,3 +267,26 @@ def test_retrieval_service_exact_and_sublinear(rng):
         # the query IS a corpus doc, so its code exists in the db:
         # the top similarity must be exactly 1.0 (ties may outrank the id)
         assert sims[0] == pytest.approx(1.0)
+
+
+def test_retrieval_service_sharded_backend(rng):
+    """RetrievalConfig.backend="sharded_amih" + num_shards threads the
+    sharded subsystem through serving; results match the linear scan."""
+    cfg = get_tiny("gemma_2b").replace(compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    svc = RetrievalService(
+        cfg, params,
+        RetrievalConfig(code_bits=32, aqbc_iters=5, m_tables=2,
+                        backend="sharded_amih", num_shards=4),
+    )
+    docs = rng.integers(1, cfg.vocab_size, (90, 24)).astype(np.int32)
+    svc.build_index(docs)
+    assert svc.engine.plan.num_shards == 4
+    ids, sims, stats = svc.search_batch(docs[:6], k=5)
+    for row, qi in enumerate(range(6)):
+        _, sims_l = svc.search_linear(docs[qi], k=5)
+        np.testing.assert_array_equal(sims[row], sims_l)
+    assert stats.backend == "sharded_amih" and stats.shards == 4
+    # the old field name stays readable on the frozen config
+    assert svc.rcfg.engine == "sharded_amih"
