@@ -1,0 +1,197 @@
+"""Serving benchmark: pipelined vs sequential engines under the
+streaming loop (throughput + p50/p99 step latency).
+
+Every cell drives ``nq`` queries through ``repro.pipeline.stream_search``
+— the actual serving loop (two-stage encode -> search pipeline, results
+yielded per batch step) — ``batch`` queries per step, and times the whole
+drain. Cells come in pairs:
+
+  - shards=1: engine "amih", sequential vs pipelined
+    (``overlap_verify=True``: tuple-step verify/probe overlap).
+  - shards=S: engine "sharded_amih", sequential (PR 3's chained bound)
+    vs pipelined (``probe_workers=S``: shard-parallel probing under the
+    shared warm-started k-th-cosine bound). The pool's adaptive
+    stand-down gates apply (ShardedAMIHEngine.PARALLEL_MIN_*): on hosts
+    without real cores, narrow batches, or tiny shards the pipelined
+    engine runs the sequential chain — ``parallel_active`` on each row
+    records whether the pool actually engaged, so a ~1.0x speedup with
+    ``parallel_active: false`` reads as "host can't pay for the pool",
+    not as a pipelining regression.
+
+Reported per cell: ms_per_query + qps over the best-of-REPEATS drain,
+and p50/p99 over that drain's per-step latencies (enqueue -> step
+completion, the number a serving SLO would track). ``speedup_vs_sequential``
+on pipelined rows is the throughput ratio against the matching
+sequential cell.
+
+Results land in ``BENCH_engine.json`` under a top-level ``"serving"``
+section (the engine rows stay untouched, old baselines without the
+section still parse) plus artifacts/bench/serving.csv;
+``scripts/bench_check.py`` gates the cells when the baseline has them.
+
+Run:  PYTHONPATH=src python benchmarks/bench_serving.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+if __package__ in (None, ""):  # run as a script: fix up both import roots
+    sys.path.insert(0, _HERE)
+    sys.path.insert(0, os.path.join(_ROOT, "src"))
+    from common import make_db, make_queries, write_csv
+else:
+    from .common import make_db, make_queries, write_csv
+
+from repro.core import make_engine
+from repro.pipeline import stream_search
+
+BENCH_JSON = os.path.join(_ROOT, "BENCH_engine.json")
+
+REPEATS = 3  # best-of; host timing at sub-ms/step is noisy
+
+
+def _engine_for(mode: str, db, p: int, S: int):
+    """The cell's engine: amih at S=1, sharded_amih otherwise; the
+    pipelined variant turns on the matching repro.pipeline path."""
+    if S == 1:
+        return make_engine(
+            "amih", db, p, query_cache_size=0,
+            overlap_verify=(mode == "pipelined"),
+        )
+    return make_engine(
+        "sharded_amih", db, p, num_shards=S,
+        probe_workers=(S if mode == "pipelined" else None),
+    )
+
+
+def _drain(engine, qs, k: int, batch: int):
+    """One full streaming drain; returns (wall seconds, step latencies)."""
+    steps = [qs[lo : lo + batch] for lo in range(0, len(qs), batch)]
+    lats = []
+    t0 = time.perf_counter()
+    for sr in stream_search(engine, steps, k):
+        lats.append(sr.latency_ms)
+    return time.perf_counter() - t0, lats
+
+
+def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
+        batches=(1, 32), shards=(1, 8), out_json: str | None = None,
+        sizes=None, csv_name: str = "serving.csv"):
+    max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 100_000))
+    if sizes is None:
+        sizes = [n for n in (10_000, 100_000, 1_000_000) if n <= max_n]
+    else:
+        sizes = [n for n in sizes if n <= max_n]
+    rows = []
+    for p in ps:
+        for n in sizes:
+            db_bits, db = make_db(n, p, seed=0)
+            _, qs = make_queries(db_bits, nq, seed=1)
+            for S in shards:
+                if S > n:
+                    continue
+                seq_ms = {}
+                for mode in ("sequential", "pipelined"):
+                    engine = _engine_for(mode, db, p, S)
+                    for batch in batches:
+                        best_t, best_lats = float("inf"), []
+                        for _ in range(REPEATS):
+                            t, lats = _drain(engine, qs, k, batch)
+                            if t < best_t:
+                                best_t, best_lats = t, lats
+                        ms_q = 1e3 * best_t / nq
+                        active = bool(
+                            mode == "pipelined" and (
+                                S == 1 or engine._use_parallel(batch)
+                            )
+                        )
+                        row = {
+                            "backend": "amih" if S == 1 else "sharded_amih",
+                            "mode": mode, "p": p, "n": n, "K": k,
+                            "batch": batch, "shards": S, "queries": nq,
+                            "parallel_active": active,
+                            "total_s": round(best_t, 6),
+                            "ms_per_query": round(ms_q, 4),
+                            "qps": round(nq / max(best_t, 1e-9), 2),
+                            "p50_ms": round(
+                                float(np.percentile(best_lats, 50)), 4),
+                            "p99_ms": round(
+                                float(np.percentile(best_lats, 99)), 4),
+                            "speedup_vs_sequential": "",
+                        }
+                        if mode == "sequential":
+                            seq_ms[batch] = ms_q
+                        else:
+                            row["speedup_vs_sequential"] = round(
+                                seq_ms[batch] / max(ms_q, 1e-9), 3
+                            )
+                        rows.append(row)
+                        extra = (
+                            f" ({row['speedup_vs_sequential']}x vs seq)"
+                            if mode == "pipelined" else ""
+                        )
+                        print(
+                            f"p={p} n={n:>9} S={S:>2} B={batch:>3} "
+                            f"{row['backend']:>13}/{mode:<10} "
+                            f"{ms_q:7.3f} ms/q  p50={row['p50_ms']:.2f} "
+                            f"p99={row['p99_ms']:.2f}{extra}"
+                        )
+    path = write_csv(csv_name, rows)
+    section = {
+        "workload": {
+            "sizes": sizes, "ps": list(ps), "k": k,
+            "batches": list(batches), "shards": list(shards),
+            "queries": nq,
+            "codes": "synthetic clustered (AQBC-like)",
+        },
+        "rows": rows,
+    }
+    if out_json is None:
+        # merge into the committed trajectory next to the engine rows
+        payload = {"bench": "engine"}
+        if os.path.exists(BENCH_JSON):
+            with open(BENCH_JSON) as f:
+                payload = json.load(f)
+        payload["serving"] = section
+        target = BENCH_JSON
+    else:
+        payload = {"bench": "serving", **section}
+        target = out_json
+    with open(target, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"wrote {path}")
+    print(f"wrote {target}")
+    return rows
+
+
+def _parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--batch", type=int, nargs="+", default=[1, 32],
+                    help="queries per serving step (axis of the sweep)")
+    ap.add_argument("--shards", type=int, nargs="+", default=[1, 8],
+                    help="shard counts (1 -> amih, >1 -> sharded_amih)")
+    ap.add_argument("--max-n", type=int, default=None,
+                    help="largest DB size (default REPRO_BENCH_MAX_N or 1e5)")
+    ap.add_argument("--nq", type=int, default=64, help="queries per cell")
+    ap.add_argument("--p", type=int, nargs="+", default=[64])
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--out", type=str, default=None,
+                    help="write a standalone JSON payload here instead of "
+                         "merging into BENCH_engine.json (bench_check)")
+    return ap.parse_args(argv)
+
+
+if __name__ == "__main__":
+    a = _parse_args()
+    run(max_n=a.max_n, nq=a.nq, ps=tuple(a.p), k=a.k,
+        batches=tuple(sorted(set(a.batch))),
+        shards=tuple(sorted(set(a.shards))), out_json=a.out)

@@ -1,7 +1,11 @@
 """Retrieval serving (the paper as a production feature): an LM encodes
-documents, AQBC binarizes the embeddings, AMIH serves exact angular KNN;
-plus the token-serving engine answering generation requests on the same
-model — encoder + generator sharing weights, as a real deployment would.
+documents, AQBC binarizes the embeddings, AMIH serves exact angular KNN
+through the STREAMING serving loop (repro.pipeline) — submit returns a
+ticket whose future resolves per batch step, run_queued(stream=True)
+yields results as each step completes while the next batch encodes, and
+every step carries queue-depth + p50/p99 latency counters; plus the
+token-serving engine answering generation requests on the same model —
+encoder + generator sharing weights, as a real deployment would.
 
 Run:  PYTHONPATH=src python examples/retrieval_serving.py
 """
@@ -31,9 +35,11 @@ def main():
     n_docs, doc_len = 400, 24
     docs = rng.integers(1, cfg.vocab_size, (n_docs, doc_len)).astype(np.int32)
 
-    # ---- index: encode -> AQBC(64 bits) -> AMIH ----
+    # ---- index: encode -> AQBC(64 bits) -> AMIH (pipelined serving) ----
     svc = RetrievalService(
-        cfg, params, RetrievalConfig(code_bits=64, aqbc_iters=8)
+        cfg, params,
+        RetrievalConfig(code_bits=64, aqbc_iters=8, search_batch_size=2,
+                        pipelined=True),
     )
     t0 = time.perf_counter()
     info = svc.build_index(docs)
@@ -41,15 +47,22 @@ def main():
           f"(AQBC objective {info['aqbc_objective']:.3f}, "
           f"m={int(info['m_tables'])} tables)")
 
-    # ---- exact angular search: queued queries, batched knn_batch steps ----
-    qids = [svc.submit(docs[qi]) for qi in (11, 222, 7, 333)]
-    results = svc.run_queued(k=5)
-    for qid, qi in zip(qids, (11, 222, 7, 333)):
-        ids, sims = results[qid]
+    # ---- exact angular search, STREAMED: submit -> tickets; results
+    # ---- arrive per batch step while the next batch is still encoding
+    queries = (11, 222, 7, 333)
+    tickets = {qi: svc.submit(docs[qi]) for qi in queries}
+    for step in svc.run_queued(k=5, stream=True):
+        lat = step.stats.latency_ms
+        print(f"step {step.step}: {len(step.results)} queries answered "
+              f"in {step.latency_ms:.0f} ms (queue depth "
+              f"{step.stats.queue_depth}, p50 {lat['p50']:.0f} ms, "
+              f"p99 {lat['p99']:.0f} ms)")
+    for qi, ticket in tickets.items():
+        ids, sims = ticket.result()          # already resolved
         ids_l, sims_l = svc.search_linear(docs[qi], k=5)
         assert np.allclose(sims, sims_l, atol=1e-9)
         print(f"query=doc[{qi}]: hits {ids[:5].tolist()} "
-              f"sims {np.round(sims[:5], 3).tolist()} (exact, batched)")
+              f"sims {np.round(sims[:5], 3).tolist()} (exact, streamed)")
 
     # single-query convenience path still returns per-query counters
     ids, sims, stats = svc.search(docs[11], k=5)

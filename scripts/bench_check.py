@@ -7,7 +7,10 @@ committed baseline, restricted to the requested batch sizes) is compared
 cell-by-cell: for every amih / sharded_amih / sharded_scan
 (backend, p, n, K, batch, shards) cell present in both runs, fail if
 fresh throughput regressed by more than ``--threshold`` (default 25% on
-ms_per_query). Host timing is noisy, so single-cell blips on a
+ms_per_query). When the committed baseline carries a ``"serving"``
+section (benchmarks/bench_serving.py: pipelined vs sequential serving
+cells with p50/p99 latency), those cells are gated the same way; older
+baselines without the section still parse and skip that gate. Host timing is noisy, so single-cell blips on a
 loaded machine are possible — the gate is opt-in (wired into
 scripts/verify.sh behind REPRO_BENCH_CHECK=1), not part of tier-1.
 
@@ -55,6 +58,94 @@ def _cells(payload, batches, max_n, shards):
                row["batch"], n_shards)
         out[key] = float(row["ms_per_query"])
     return out
+
+
+def _serving_cells(section, max_n):
+    """(backend, mode, p, n, K, batch, shards) -> ms_per_query for the
+    serving-bench cells (see benchmarks/bench_serving.py)."""
+    out = {}
+    for row in section.get("rows", []):
+        if row["n"] > max_n:
+            continue
+        key = (row["backend"], row["mode"], row["p"], row["n"],
+               row["K"], row["batch"], row["shards"])
+        out[key] = float(row["ms_per_query"])
+    return out
+
+
+def check_serving(baseline, max_n, threshold) -> int:
+    """Gate the serving cells when the baseline carries them. Baselines
+    written before bench_serving existed simply lack the section — they
+    still parse and the gate passes them through."""
+    section = baseline.get("serving")
+    if not section:
+        print("bench_check: baseline has no serving section; skipping "
+              "the serving gate (run benchmarks/bench_serving.py)")
+        return 0
+    wl = section["workload"]
+    serving_max_n = min(max_n, max(wl["sizes"]))
+
+    import bench_serving
+
+    def fresh(ps, sizes, batches, shards):
+        with tempfile.NamedTemporaryFile(
+            mode="r", suffix=".json", prefix="bench_serving_check_",
+            delete=False,
+        ) as tmp:
+            path = tmp.name
+        try:
+            bench_serving.run(
+                max_n=serving_max_n, nq=wl["queries"],
+                ps=tuple(ps), k=wl["k"], sizes=sorted(sizes),
+                batches=tuple(batches), shards=tuple(shards),
+                out_json=path, csv_name="serving_check.csv",
+            )
+            with open(path) as f:
+                return _serving_cells(json.load(f), serving_max_n)
+        finally:
+            os.unlink(path)
+
+    base_cells = _serving_cells(section, serving_max_n)
+    fresh_cells = fresh(wl["ps"], wl["sizes"], wl["batches"], wl["shards"])
+    shared = sorted(set(base_cells) & set(fresh_cells))
+    if not shared:
+        print("bench_check: no comparable serving cells")
+        return 2
+
+    def regressed():
+        return [c for c in shared
+                if fresh_cells[c] / max(base_cells[c], 1e-9)
+                > 1.0 + threshold]
+
+    failures = regressed()
+    if failures:
+        # one retry narrowed to the failing cells' workload (the engine
+        # gate's shape) — a single noisy cell must not re-run the sweep
+        print(f"bench_check: {len(failures)} serving cell(s) over "
+              f"threshold; re-measuring once to rule out host noise...")
+        retry = fresh(
+            {c[2] for c in failures}, {c[3] for c in failures},
+            {c[5] for c in failures}, {c[6] for c in failures},
+        )
+        for cell, ms in retry.items():
+            if cell in fresh_cells:
+                fresh_cells[cell] = min(fresh_cells[cell], ms)
+        failures = regressed()
+    for cell in shared:
+        backend, mode, p, n, K, batch, n_shards = cell
+        ratio = fresh_cells[cell] / max(base_cells[cell], 1e-9)
+        status = "FAIL" if cell in failures else "ok"
+        print(f"  [{status}] {backend:>13}/{mode:<10} p={p} n={n:>9} "
+              f"K={K:>3} B={batch:>3} S={n_shards:>2} "
+              f"baseline={base_cells[cell]:.3f} "
+              f"fresh={fresh_cells[cell]:.3f} ms/q ({ratio:.2f}x)")
+    if failures:
+        print(f"bench_check: {len(failures)}/{len(shared)} serving cells "
+              f"regressed beyond {threshold:.0%}")
+        return 1
+    print(f"bench_check: all {len(shared)} serving cells within "
+          f"{threshold:.0%} of the committed baseline")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -162,7 +253,7 @@ def main(argv=None) -> int:
         return 1
     print(f"bench_check: all {len(shared)} engine cells within "
           f"{args.threshold:.0%} of the committed baseline")
-    return 0
+    return check_serving(baseline, max_n, args.threshold)
 
 
 if __name__ == "__main__":

@@ -8,6 +8,10 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
+# Fast pipelined-serving smoke: every pipelined path (AMIH verify/probe
+# overlap, shard-parallel probing, streaming loop) answers bit-identical
+# to its sequential counterpart on a small workload (~10 s).
+python -m repro.pipeline.smoke
 if [[ "${REPRO_BENCH_CHECK:-0}" == "1" ]]; then
   python scripts/bench_check.py --max-n "${REPRO_BENCH_CHECK_MAX_N:-10000}"
 fi

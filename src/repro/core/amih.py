@@ -274,6 +274,7 @@ class AMIHIndex:
         k: int,
         stats: Optional[List[AMIHStats]] = None,
         enumeration_cap: Optional[int] = None,
+        overlap=None,
     ) -> Tuple[np.ndarray, np.ndarray]:
         """Exact angular KNN for a batch of packed queries: (B, W) -> ids,
         sims each (B, min(k, n)).
@@ -285,6 +286,12 @@ class AMIHIndex:
         keeps its own dedup bitmap / probe-cover staircase / pending
         buckets, so per-query results and counters are identical to
         ``knn`` run query-by-query.
+
+        ``overlap`` (a ``repro.pipeline.VerifyOverlap``) pipelines each
+        group's tuple loop one step deep — step t verifies while step
+        t+1 probes. Results stay bit-identical; probe-side counters of a
+        finishing query may run one step past the sequential ones (see
+        pipeline/overlap.py).
         """
         q_words = np.ascontiguousarray(
             np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
@@ -297,7 +304,9 @@ class AMIHIndex:
         out_sims = np.empty((B, k), dtype=np.float64)
         if k == 0:
             return out_ids, out_sims
-        for s in self._run_groups(q_words, k, stats, enumeration_cap):
+        for s in self._run_groups(
+            q_words, k, stats, enumeration_cap, overlap=overlap
+        ):
             out_ids[s.qi] = s.out_ids
             out_sims[s.qi] = s.out_sims
         if self.id_offset:
@@ -311,6 +320,8 @@ class AMIHIndex:
         stop_below: np.ndarray,
         stats: Optional[List[AMIHStats]] = None,
         enumeration_cap: Optional[int] = None,
+        overlap=None,
+        on_done=None,
     ) -> List[Tuple[np.ndarray, np.ndarray]]:
         """``knn_batch`` with a per-query early-termination bound: query
         ``qi`` stops as soon as the next probing tuple's sim drops
@@ -325,13 +336,30 @@ class AMIHIndex:
         the bound are still collected, so the merged sims stay
         bit-identical to an unsharded search. Emitted ids carry
         ``id_offset`` like every public method.
+
+        ``stop_below`` is re-read at EVERY tuple step through a no-copy
+        view, so callers may hand in a live array whose entries are
+        raised concurrently (the shard-parallel shared bound of
+        repro.pipeline.shardpool): as long as each entry only ever
+        increases and stays a valid lower bound on the query's global
+        k-th cosine, results remain exact. The live contract requires a
+        float64 array of shape (B,) — any other dtype or shape is
+        SNAPSHOTTED by the entry conversion (results stay exact, but
+        concurrent raises are never observed).
+
+        ``on_done(qi, ids, sims)`` fires the moment query ``qi`` fills
+        its K results (its final, already-offset id/sim arrays) — the
+        shard-parallel pool publishes the local k-th to peers through it
+        while this search is still probing other queries.
         """
         q_words = np.ascontiguousarray(
             np.atleast_2d(np.asarray(q_words, dtype=WORD_DTYPE))
         )
         B = q_words.shape[0]
-        bounds = np.broadcast_to(
-            np.asarray(stop_below, dtype=np.float64), (B,)
+        bounds_in = np.asarray(stop_below, dtype=np.float64)
+        bounds = (
+            bounds_in if bounds_in.shape == (B,)
+            else np.broadcast_to(bounds_in, (B,))
         )
         if stats is not None and len(stats) != B:
             raise ValueError(f"stats list has {len(stats)} entries for B={B}")
@@ -341,7 +369,8 @@ class AMIHIndex:
         if k == 0:
             return out
         for s in self._run_groups(
-            q_words, k, stats, enumeration_cap, stop_below=bounds
+            q_words, k, stats, enumeration_cap, stop_below=bounds,
+            overlap=overlap, on_done=on_done,
         ):
             ids = np.asarray(s.out_ids, dtype=np.int64) + self.id_offset
             out[s.qi] = (ids, np.asarray(s.out_sims, dtype=np.float64))
@@ -354,11 +383,15 @@ class AMIHIndex:
         stats: Optional[List[AMIHStats]],
         enumeration_cap: Optional[int],
         stop_below: Optional[np.ndarray] = None,
+        overlap=None,
+        on_done=None,
     ) -> List[_QueryState]:
         """Shared group loop of ``knn_batch`` / ``knn_batch_bounded``:
         same-z queries advance in lockstep through the probe ->
         grouped-verify -> bucket -> emit pipeline. Returns every query's
-        final state (out_ids/out_sims hold LOCAL row ids)."""
+        final state (out_ids/out_sims hold LOCAL row ids). With
+        ``overlap`` (repro.pipeline.VerifyOverlap) each group's loop is
+        software-pipelined one tuple step deep instead."""
         B = q_words.shape[0]
         zs = popcount(q_words)
         groups: Dict[int, List[int]] = {}
@@ -368,54 +401,102 @@ class AMIHIndex:
         done_states: List[_QueryState] = []
         for z, qis in groups.items():
             states = [self._make_state(q_words[qi], qi, stats) for qi in qis]
-            r_hat = rhat(z)
-            for (r1, r2) in self._probing_iter(z):
-                active = [s for s in states if not s.done]
-                if not active:
-                    break
-                s_val = sim_value(self.p, z, r1, r2)
-                if stop_below is not None:
-                    # every later tuple has sim <= s_val: below the bound
-                    # nothing more from this query can reach the global
-                    # top-K (ties at the bound keep probing).
-                    for s in active:
-                        if s_val < stop_below[s.qi]:
-                            s.done = True
-                    active = [s for s in active if not s.done]
-                    if not active:
-                        break
-                # 1. probe: per-query table lookups -> fresh candidate ids
-                fresh_states: List[_QueryState] = []
-                fresh_blocks: List[np.ndarray] = []
-                for s in active:
-                    if s.stats is not None:
-                        s.stats.tuples_processed += 1
-                        s.stats.max_radius = max(s.stats.max_radius, r1 + r2)
-                        if r1 + r2 > r_hat:
-                            s.stats.exceeded_rhat = True
-                    fresh = self._probe_tables_for_tuple(
-                        s, r1, r2, enumeration_cap
-                    )
-                    if fresh.size:
-                        if s.stats is not None:
-                            s.stats.verified += fresh.size
-                        fresh_states.append(s)
-                        fresh_blocks.append(fresh)
-                # 2+3. verify the whole z-group in one call and bucket
-                if fresh_blocks:
-                    self._verify_and_bucket(fresh_states, fresh_blocks)
-                # 4. emit this tuple's bucket per query
-                for s in active:
-                    hits = s.pending.pop((r1, r2), None)
-                    if hits:
-                        ids = np.sort(np.concatenate(hits))
-                        take = min(ids.size, k - len(s.out_ids))
-                        s.out_ids.extend(ids[:take].tolist())
-                        s.out_sims.extend([s_val] * take)
-                        if len(s.out_ids) >= k:
-                            s.done = True
+            if overlap is not None:
+                overlap.run_group(
+                    self, z, states, k, enumeration_cap, stop_below,
+                    on_done=on_done,
+                )
+            else:
+                self._run_group_sequential(
+                    z, states, k, enumeration_cap, stop_below, on_done
+                )
             done_states.extend(states)
         return done_states
+
+    def _notify_done(self, states, on_done) -> None:
+        """Fire ``on_done`` for states that just filled their K (their
+        result lists are final from this point on)."""
+        for s in states:
+            if s.done:
+                on_done(
+                    s.qi,
+                    np.asarray(s.out_ids, dtype=np.int64) + self.id_offset,
+                    np.asarray(s.out_sims, dtype=np.float64),
+                )
+
+    def _run_group_sequential(
+        self,
+        z: int,
+        states: List[_QueryState],
+        k: int,
+        enumeration_cap: Optional[int],
+        stop_below: Optional[np.ndarray],
+        on_done=None,
+    ) -> None:
+        """One z-group's strict probe -> verify -> bucket -> emit loop."""
+        r_hat = rhat(z)
+        for (r1, r2) in self._probing_iter(z):
+            active = [s for s in states if not s.done]
+            if not active:
+                break
+            s_val = sim_value(self.p, z, r1, r2)
+            if stop_below is not None:
+                # every later tuple has sim <= s_val: below the bound
+                # nothing more from this query can reach the global
+                # top-K (ties at the bound keep probing).
+                for s in active:
+                    if s_val < stop_below[s.qi]:
+                        s.done = True
+                active = [s for s in active if not s.done]
+                if not active:
+                    break
+            # 1. probe: per-query table lookups -> fresh candidate ids
+            fresh_states: List[_QueryState] = []
+            fresh_blocks: List[np.ndarray] = []
+            for s in active:
+                fresh = self._probe_step(s, r1, r2, r_hat, enumeration_cap)
+                if fresh.size:
+                    if s.stats is not None:
+                        s.stats.verified += fresh.size
+                    fresh_states.append(s)
+                    fresh_blocks.append(fresh)
+            # 2+3. verify the whole z-group in one call and bucket
+            if fresh_blocks:
+                self._verify_and_bucket(fresh_states, fresh_blocks)
+            # 4. emit this tuple's bucket per query
+            self._emit_tuple(active, r1, r2, s_val, k)
+            if on_done is not None:
+                self._notify_done(active, on_done)
+
+    def _probe_step(
+        self,
+        s: _QueryState,
+        r1: int,
+        r2: int,
+        r_hat: int,
+        enumeration_cap: Optional[int],
+    ) -> np.ndarray:
+        """Per-query probing for one tuple step, with its stats updates
+        (shared by the sequential and the pipelined group loop)."""
+        if s.stats is not None:
+            s.stats.tuples_processed += 1
+            s.stats.max_radius = max(s.stats.max_radius, r1 + r2)
+            if r1 + r2 > r_hat:
+                s.stats.exceeded_rhat = True
+        return self._probe_tables_for_tuple(s, r1, r2, enumeration_cap)
+
+    def _emit_tuple(self, states, r1: int, r2: int, s_val: float, k: int):
+        """Step 4: emit tuple (r1, r2)'s bucket for each given state, in
+        ascending-id order at the host float64 sim, capping at k."""
+        for s in states:
+            hits = s.pending.pop((r1, r2), None)
+            if hits:
+                ids = np.sort(np.concatenate(hits))
+                take = min(ids.size, k - len(s.out_ids))
+                s.out_ids.extend(ids[:take].tolist())
+                s.out_sims.extend([s_val] * take)
+                if len(s.out_ids) >= k:
+                    s.done = True
 
     def _probing_iter(self, z: int) -> Iterator[Tuple[int, int]]:
         """Probing sequence for popcount z, served from the per-index
@@ -577,10 +658,28 @@ class AMIHIndex:
         query (the old np.unique(axis=0) row-sort was the dominant fixed
         cost of small verification batches).
         """
+        self._bucket_keys(states, blocks, self._verify_keys(states, blocks))
+
+    def _verify_keys(
+        self, states: List[_QueryState], blocks: List[np.ndarray]
+    ) -> List[np.ndarray]:
+        """Backend half of ``_verify_and_bucket``: the grouped tuple
+        verification alone, returning per-query packed-key arrays. Reads
+        only the index and the DB — safe to run on a worker thread while
+        the main thread probes the next tuple step (pipeline/overlap.py);
+        the mutable bucketing stays on the caller's thread."""
         if self.verify_backend == "pallas":
-            keys_list = self._verify_group_pallas(states, blocks)
-        else:
-            keys_list = self._verify_group_numpy(states, blocks)
+            return self._verify_group_pallas(states, blocks)
+        return self._verify_group_numpy(states, blocks)
+
+    def _bucket_keys(
+        self,
+        states: List[_QueryState],
+        blocks: List[np.ndarray],
+        keys_list: List[np.ndarray],
+    ) -> None:
+        """Bucketing half of ``_verify_and_bucket``: group each query's
+        candidates by packed key into its pending dict."""
         pp = self.p + 1
         for state, cand, keys in zip(states, blocks, keys_list):
             order = np.argsort(keys, kind="stable")
@@ -623,7 +722,7 @@ class AMIHIndex:
     def _verify_group_pallas(
         self, states: List[_QueryState], blocks: List[np.ndarray]
     ) -> List[np.ndarray]:
-        """One ``verify_tuples_grouped`` launch for the z-group: blocks are
+        """``verify_tuples_grouped`` launches for the z-group: blocks are
         gathered device-side from the resident DB into a padded
         (B_g, C_max, W) layout and come back as packed bucket keys.
 
@@ -631,7 +730,15 @@ class AMIHIndex:
         words are split across several launches — greedily over query
         rows, and along the candidate axis when even a single block is
         oversized (a fell-back-to-scan query's block is the whole DB) —
-        bounded device memory beats launch economy there.
+        bounded device memory beats launch economy there. Regular
+        sub-batches are double-buffered: the next launch is DISPATCHED
+        (``ops.verify_tuples_grouped_launch`` is non-blocking) before
+        the previous one is resolved, overlapping device work and
+        transfers — but at most two launches are ever in flight, and the
+        column chunks of an oversized block resolve eagerly, because
+        each in-flight launch holds its padded buffers live and an
+        unbounded queue would rebuild exactly the footprint the budget
+        exists to prevent.
         """
         from ..kernels import ops
 
@@ -640,26 +747,29 @@ class AMIHIndex:
         # largest power of two <= budget // W: keeps segments aligned with
         # the op's pad_bucket so padding never blows past the budget
         col_step = max(8, 1 << (max(budget // W, 1).bit_length() - 1))
+        # deferred materializers, double-buffered: at most 2 in flight
+        pending: List[object] = []
         out: List[Optional[np.ndarray]] = [None] * len(blocks)
         i = 0
         while i < len(blocks):
             if ops.pad_bucket(blocks[i].size, minimum=8) * W > budget:
                 # oversized single block: chunk along the candidate axis
+                # and resolve each segment eagerly (keeping them all in
+                # flight would hold ~N/col_step padded buffers live)
                 block = blocks[i]
                 q_row = states[i].q_words[None, :]
-                parts = []
+                parts: List[np.ndarray] = []
                 for lo in range(0, block.size, col_step):
                     seg = block[lo : lo + col_step]
                     self.verify_launches += 1
-                    keys = ops.verify_tuples_grouped_op(
+                    parts.append(ops.verify_tuples_grouped_launch(
                         q_row,
                         self.db_dev,
                         np.ascontiguousarray(seg[None, :]),
                         np.array([seg.size], dtype=np.int32),
                         p=self.p,
                         use_pallas=True,
-                    )
-                    parts.append(keys[0].astype(np.int64))
+                    ).get()[0].astype(np.int64))
                 out[i] = np.concatenate(parts)
                 i += 1
                 continue
@@ -683,7 +793,7 @@ class AMIHIndex:
                 idx[t, : b.size] = b
                 lengths[t] = b.size
             self.verify_launches += 1
-            keys = ops.verify_tuples_grouped_op(
+            handle = ops.verify_tuples_grouped_launch(
                 np.stack([s.q_words for s in sub_states]),
                 self.db_dev,
                 idx,
@@ -691,7 +801,16 @@ class AMIHIndex:
                 p=self.p,
                 use_pallas=True,
             )
-            for t, b in enumerate(sub_blocks):
-                out[i + t] = keys[t, : b.size].astype(np.int64)
+
+            def resolve_grouped(row=i, handle=handle, sizes=[b.size for b in sub_blocks]):
+                keys = handle.get()
+                for t, size in enumerate(sizes):
+                    out[row + t] = keys[t, :size].astype(np.int64)
+
+            pending.append(resolve_grouped)
+            if len(pending) >= 2:
+                pending.pop(0)()
             i = j
+        for resolve in pending:
+            resolve()
         return out

@@ -1,20 +1,30 @@
-"""Back-compat shim: the device-sharded scan moved to ``repro.shard``.
+"""Deprecated shim: the device-sharded scan moved to ``repro.shard``.
 
 The one-off helper grew into the sharded search subsystem
 (``repro.shard``: ShardPlan + distributed primitives + the
 "sharded_scan"/"sharded_amih" engine backends). Existing imports of
-``repro.core.distributed`` keep working through this re-export; new code
-should import from ``repro.shard``.
+``repro.core.distributed`` keep working through this re-export but now
+raise a ``DeprecationWarning``; new code should import from
+``repro.shard``.
 """
 
 from __future__ import annotations
 
-from ..shard.distributed import (  # noqa: F401
+import warnings
+
+warnings.warn(
+    "repro.core.distributed is deprecated; import ShardPlan and the "
+    "sharded-scan primitives from repro.shard instead",
+    DeprecationWarning,
+    stacklevel=2,
+)
+
+from ..shard.distributed import (  # noqa: F401,E402
     make_retrieval_step,
     sharded_scan_candidates,
     sharded_scan_topk,
 )
-from ..shard.plan import ShardPlan  # noqa: F401
+from ..shard.plan import ShardPlan  # noqa: F401,E402
 
 __all__ = [
     "ShardPlan",

@@ -77,6 +77,13 @@ class EngineStats:
     launches issued) — the serving-side view of where a batch's work
     landed. ``cache_hits`` counts query rows answered from the engine's
     hot-query cache without any probing (AMIHEngine's LRU).
+
+    Streaming serving (repro.pipeline.stream) fills the queue-side
+    counters: ``queue_depth`` is the number of queries still waiting
+    behind the batch step this stats object belongs to, and
+    ``latency_ms`` holds rolling answered-query latency percentiles
+    ({"p50": ..., "p99": ..., "mean": ..., "count": ...}); both stay at
+    their defaults for direct ``knn_batch`` calls.
     """
 
     backend: str
@@ -85,6 +92,8 @@ class EngineStats:
     shards: int = 0
     per_shard: List[Dict[str, int]] = field(default_factory=list)
     cache_hits: int = 0
+    queue_depth: int = 0
+    latency_ms: Dict[str, float] = field(default_factory=dict)
 
     _MAX_COUNTERS = frozenset({"max_radius"})
 
@@ -424,16 +433,25 @@ class AMIHEngine(SearchEngine):
     ``EngineStats.cache_hits`` / ``engine.cache_hits``; the cached stats
     counters are replayed (copied) so per-query accounting stays
     identical to an uncached run.
+
+    ``overlap_verify=True`` pipelines each z-group's tuple loop one step
+    deep (repro.pipeline.VerifyOverlap): tuple step t's grouped
+    verification runs on a worker thread / the device while the host
+    probes step t+1. Results are bit-identical to the sequential loop;
+    probe-side counters of a query that finishes at step t may include
+    one extra (discarded) probing step — see pipeline/overlap.py.
     """
 
     name = "amih"
 
     def __init__(self, index: AMIHIndex, enumeration_cap,
-                 query_cache_size: int = 256):
+                 query_cache_size: int = 256, overlap_verify: bool = False):
         self.index = index
         self.p = index.p
         self.enumeration_cap = enumeration_cap
         self.query_cache_size = query_cache_size
+        self.overlap_verify = overlap_verify
+        self._overlap = None   # VerifyOverlap, created on first use
         # (q_words bytes, k) -> (ids row, sims row, AMIHStats); ordered
         # oldest-first so popitem(last=False) evicts the LRU entry.
         self._query_cache: "OrderedDict[Tuple[bytes, int], tuple]" = (
@@ -450,6 +468,7 @@ class AMIHEngine(SearchEngine):
         verify_backend: str = "numpy",
         enumeration_cap: Optional[int] = None,
         query_cache_size: int = 256,
+        overlap_verify: bool = False,
         **cfg: Any,
     ) -> "AMIHEngine":
         if cfg:
@@ -460,7 +479,29 @@ class AMIHEngine(SearchEngine):
         index = AMIHIndex.build(
             db_words, p, m=m, verify_backend=verify_backend
         )
-        return cls(index, enumeration_cap, query_cache_size)
+        return cls(index, enumeration_cap, query_cache_size, overlap_verify)
+
+    def _overlap_driver(self):
+        """The engine's VerifyOverlap (one worker, lazily created)."""
+        if self._overlap is None and self.overlap_verify:
+            from ..pipeline.overlap import VerifyOverlap
+
+            self._overlap = VerifyOverlap()
+        return self._overlap
+
+    def close(self) -> None:
+        """Release the overlap worker thread (idempotent); engines are
+        also closed on GC so sweeps that build many pipelined engines
+        don't accumulate idle verify workers."""
+        overlap, self._overlap = self._overlap, None
+        if overlap is not None:
+            overlap.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass   # interpreter shutdown: executors may already be gone
 
     @property
     def n(self) -> int:
@@ -499,6 +540,7 @@ class AMIHEngine(SearchEngine):
             m_ids, m_sims = self.index.knn_batch(
                 q[rows], k_eff, stats=miss_stats,
                 enumeration_cap=self.enumeration_cap,
+                overlap=self._overlap_driver(),
             )
             for j, (key, idxs) in enumerate(miss_keys.items()):
                 for i in idxs:

@@ -24,11 +24,13 @@ from .verify_tuples import verify_tuples_grouped as _verify_grouped_kernel
 
 __all__ = [
     "LAUNCH_COUNTS",
+    "PendingKeys",
     "merge_topk",
     "on_tpu",
     "pad_bucket",
     "scan_scores",
     "scan_topk",
+    "verify_tuples_grouped_launch",
     "verify_tuples_grouped_op",
     "verify_tuples_op",
 ]
@@ -299,6 +301,71 @@ def _gather_verify_grouped(
     return ref.verify_tuples_grouped_ref(q_words, cand, lengths, p)
 
 
+class PendingKeys:
+    """Handle for an in-flight grouped-verify launch.
+
+    Holds the (padded) device array of packed bucket keys without forcing
+    a host sync — on accelerator backends the computation dispatches
+    asynchronously, so the issuing thread can keep probing the next tuple
+    step while the device works. ``get()`` materializes the unpadded
+    (B, C) host array (blocking until the launch and transfer complete).
+    """
+
+    __slots__ = ("_keys", "_B", "_C")
+
+    def __init__(self, keys, B: int, C: int):
+        self._keys = keys
+        self._B = B
+        self._C = C
+
+    def get(self) -> np.ndarray:
+        return np.asarray(self._keys)[: self._B, : self._C]
+
+
+def verify_tuples_grouped_launch(
+    q_words,
+    db_words: jax.Array,
+    cand_idx,
+    lengths,
+    *,
+    p: int,
+    use_pallas: bool | None = None,
+    blk_c: int = DEFAULT_BLK_C,
+) -> PendingKeys:
+    """Non-blocking form of ``verify_tuples_grouped_op``: pads, dispatches
+    the jitted gather+verify, and returns a ``PendingKeys`` handle
+    WITHOUT synchronizing with the device. Same padding/trace-cache
+    contract as the blocking op (which is now ``launch().get()``)."""
+    q = jnp.asarray(q_words)
+    idx = np.ascontiguousarray(np.asarray(cand_idx, dtype=np.int32))
+    lens = np.asarray(lengths, dtype=np.int32)
+    B, C = idx.shape
+    if C == 0 or B == 0:
+        return PendingKeys(np.full((B, C), -1, dtype=np.int32), B, C)
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    Bp = pad_bucket(B, minimum=1)
+    Cp = pad_bucket(C, minimum=8)
+    blk = min(blk_c, Cp)
+    qp = _pad_to(q, 0, Bp)
+    idxp = np.zeros((Bp, Cp), dtype=np.int32)
+    idxp[:B, :C] = idx
+    lensp = np.zeros(Bp, dtype=np.int32)
+    lensp[:B] = lens
+    LAUNCH_COUNTS["verify_grouped"] += 1
+    keys = _gather_verify_grouped(
+        qp,
+        db_words,
+        jnp.asarray(idxp),
+        jnp.asarray(lensp),
+        p=p,
+        blk_c=blk,
+        use_pallas=use_pallas,
+        interpret=not on_tpu(),
+    )
+    return PendingKeys(keys, B, C)
+
+
 def verify_tuples_grouped_op(
     q_words,
     db_words: jax.Array,
@@ -321,33 +388,11 @@ def verify_tuples_grouped_op(
     before the jitted gather+verify, so the trace cache stays
     O(log B * log C) instead of one entry per ragged candidate shape.
     Candidate rows are gathered from ``db_words`` *on device* — the host
-    ships only the (B, C_max) index matrix, never the code rows.
+    ships only the (B, C_max) index matrix, never the code rows. For
+    host/device overlap use ``verify_tuples_grouped_launch`` and resolve
+    the returned handle when the keys are actually needed.
     """
-    q = jnp.asarray(q_words)
-    idx = np.ascontiguousarray(np.asarray(cand_idx, dtype=np.int32))
-    lens = np.asarray(lengths, dtype=np.int32)
-    B, C = idx.shape
-    if C == 0 or B == 0:
-        return np.full((B, C), -1, dtype=np.int32)
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    Bp = pad_bucket(B, minimum=1)
-    Cp = pad_bucket(C, minimum=8)
-    blk = min(blk_c, Cp)
-    qp = _pad_to(q, 0, Bp)
-    idxp = np.zeros((Bp, Cp), dtype=np.int32)
-    idxp[:B, :C] = idx
-    lensp = np.zeros(Bp, dtype=np.int32)
-    lensp[:B] = lens
-    LAUNCH_COUNTS["verify_grouped"] += 1
-    keys = _gather_verify_grouped(
-        qp,
-        db_words,
-        jnp.asarray(idxp),
-        jnp.asarray(lensp),
-        p=p,
-        blk_c=blk,
-        use_pallas=use_pallas,
-        interpret=not on_tpu(),
-    )
-    return np.asarray(keys)[:B, :C]
+    return verify_tuples_grouped_launch(
+        q_words, db_words, cand_idx, lengths,
+        p=p, use_pallas=use_pallas, blk_c=blk_c,
+    ).get()

@@ -1,0 +1,66 @@
+"""Async pipelined serving subsystem: overlapped stages for AMIH search.
+
+The paper's AMIH query (§5) is a fixed alternation of host and device
+work; run strictly in that order, each resource idles while the other
+runs. This package pipelines the alternation at every level of the
+stack, without giving up exactness — every pipelined path returns
+bit-identical (ids, sims) to its sequential counterpart, up to ties
+inside one Hamming tuple.
+
+Stage map (paper §5 <-> modules here):
+
+  encode      query embedding -> AQBC code (§6.1's binarization; device)
+                `stream.stream_search` overlaps it with the search of the
+                previous batch step via `stages.StagedExecutor`.
+  probe       substring-tuple bucket walks T_{r1,r2,m} (Prop. 4; host)
+                `overlap.VerifyOverlap` probes tuple step t+1 while step
+                t's verification is in flight; `shardpool` probes all
+                shards of a sharded index concurrently under one shared
+                monotone k-th-cosine bound (the cross-shard form of the
+                paper's early-termination rule).
+  verify      exact full-code tuple popcounts of fresh candidates
+                (Eq. 3 / §5's candidate check; device or vectorized
+                host) — issued asynchronously per tuple step
+                (`kernels.ops.verify_tuples_grouped_launch`).
+  merge/emit  bucket by exact tuple, emit in decreasing-sim order
+                (Prop. 4's exact emission; host) — order-independent
+                within a step, which is what makes the overlap legal.
+
+Modules:
+  - stages.py    — StagedExecutor: per-stage single-worker thread pools,
+                   bounded in-flight window, in-order results.
+  - overlap.py   — VerifyOverlap: AMIH tuple-step verify/probe overlap
+                   (plugs into AMIHIndex via the ``overlap=`` knob).
+  - shardpool.py — SharedBound + probe_shards_parallel: shard-parallel
+                   probing for "sharded_amih" with a shared, monotone,
+                   warm-startable k-th-cosine bound.
+  - stream.py    — Ticket / stream_search / LatencyTracker: streaming
+                   ``run_queued`` results with queue-depth and p50/p99
+                   latency counters on EngineStats.
+  - smoke.py     — fast end-to-end pipelined==sequential check
+                   (``python -m repro.pipeline.smoke``; wired into
+                   scripts/verify.sh).
+
+Engine knobs (see core.engine / shard.engines / serve.retrieval):
+  make_engine("amih", db, p, overlap_verify=True)
+  make_engine("sharded_amih", db, p, num_shards=8, probe_workers=8)
+  RetrievalConfig(pipelined=True);  RetrievalService.run_queued(stream=True)
+"""
+
+from .overlap import VerifyOverlap
+from .shardpool import SharedBound, prime_ids, probe_shards_parallel
+from .stages import Stage, StagedExecutor
+from .stream import LatencyTracker, StepResult, Ticket, stream_search
+
+__all__ = [
+    "LatencyTracker",
+    "SharedBound",
+    "Stage",
+    "StagedExecutor",
+    "StepResult",
+    "Ticket",
+    "VerifyOverlap",
+    "prime_ids",
+    "probe_shards_parallel",
+    "stream_search",
+]

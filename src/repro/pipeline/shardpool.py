@@ -1,0 +1,407 @@
+"""Shard-parallel AMIH probing with a shared monotone k-th-cosine bound.
+
+The sequential ``sharded_amih`` engine probes its shards one after
+another, chaining each shard's pooled k-th cosine into the next shard's
+``stop_below`` bound. That serializes the embarrassingly parallel part of
+multi-index hashing — every shard owns a disjoint, read-only table set —
+and gives shard 0 no bound at all.
+
+This module replaces the chain with a shared per-query bound probed by
+all shards CONCURRENTLY:
+
+  - ``SharedBound`` owns a live float64 ``bounds`` array handed directly
+    to every shard's ``AMIHIndex.knn_batch_bounded`` (which re-reads it
+    at every tuple step, no copy). Entries only ever increase, and every
+    value written is the k-th best exact sim of SOME subset of real DB
+    rows — hence always a valid lower bound on the global k-th, which is
+    all exactness needs (see the engine docstring). Monotonicity is also
+    what makes lock-free reads safe: a stale read is merely a weaker,
+    still-correct bound.
+
+  - Bounds rise *while shards probe*: the ``on_done`` hook fires inside
+    the bounded search the moment a query fills its local K, publishing
+    that shard's local k-th immediately — peers prune mid-flight instead
+    of waiting for whole-shard completion the way the sequential chain
+    waits for whole-shard results.
+
+  - ``prime()``-style warm starting: the exact sims of a small
+    deterministic row sample (``prime_ids``) are offered before any
+    probing, so even the first-finishing shard — which the sequential
+    chain probes with no bound at all — starts pruned.
+
+Worker modes (``mode=``):
+
+  - "process" (default where ``fork`` exists): one forked worker per
+    shard, the bounds array in ``multiprocessing.RawArray`` shared
+    memory. Probing is a Python loop over many small NumPy calls — far
+    too GIL-bound for threads to help on CPython (measured: 8 threads
+    run the SAME work ~2.5-3x slower than one) — so real CPU parallelism
+    needs processes. Fork is cheap here: the child inherits the built
+    shard indexes copy-on-write and ships back only (B, k) results.
+    Racy ``max`` writes to the shared array can lose an update, leaving
+    a smaller — still valid — bound; exactness is unaffected.
+  - "thread": the issue-shaped thread pool, the right choice on
+    free-threaded (nogil) interpreters and for mesh-device workloads
+    where probing cost is dominated by device calls that release the
+    GIL.
+  - "auto": "process" when the platform has ``fork``, else "thread".
+"""
+
+from __future__ import annotations
+
+import multiprocessing
+import sys
+import threading
+import warnings
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+__all__ = [
+    "SharedBound",
+    "prime_ids",
+    "probe_shards_parallel",
+    "resolve_probe_mode",
+]
+
+_EMPTY64 = np.empty(0, dtype=np.int64)
+
+
+def resolve_probe_mode(mode: str = "auto") -> str:
+    if mode not in ("auto", "process", "thread"):
+        raise ValueError(f"unknown probe mode {mode!r}")
+    if mode != "auto":
+        return mode
+    can_fork = (
+        sys.platform != "win32"
+        and "fork" in multiprocessing.get_all_start_methods()
+    )
+    return "process" if can_fork else "thread"
+
+
+class SharedBound:
+    """Per-query monotone lower bounds on the global k-th cosine.
+
+    ``bounds`` is a live float64 (B,) array: consumers hand it directly
+    to ``AMIHIndex.knn_batch_bounded`` while producers raise it through
+    ``offer`` (pooled candidates, deduplicated by global id — the same
+    code offered twice must not fake a tighter k-th than the DB
+    supports) or ``raise_to`` (a known-valid k-th, e.g. a shard's local
+    k-th). With ``shared_memory=True`` the array lives in a
+    ``multiprocessing.RawArray`` so forked shard workers see — and
+    raise — the same bounds; ``bounds=<array>`` aliases an existing live
+    array instead (how a forked worker builds its own pooling view over
+    the inherited shared memory).
+    """
+
+    def __init__(self, B: int, k: int, shared_memory: bool = False,
+                 bounds: Optional[np.ndarray] = None):
+        self.k = k
+        self.raw = None
+        if bounds is not None:
+            self.bounds = bounds
+        elif shared_memory:
+            ctx = multiprocessing.get_context("fork")
+            self.raw = ctx.RawArray("d", B)
+            self.bounds = np.frombuffer(self.raw, dtype=np.float64)
+            self.bounds[:] = -np.inf
+        else:
+            self.bounds = np.full(B, -np.inf, dtype=np.float64)
+        # per query: pooled (ids, sims) of the current top-<=k candidates
+        self._ids: List[np.ndarray] = [_EMPTY64 for _ in range(B)]
+        self._sims: List[np.ndarray] = [
+            np.empty(0, dtype=np.float64) for _ in range(B)
+        ]
+        self._lock = threading.Lock()
+
+    def raise_to(self, qi: int, kth: float) -> None:
+        """Monotone write of a known-valid bound (lock-free)."""
+        if kth > self.bounds[qi]:
+            self.bounds[qi] = kth
+
+    def offer(self, qi: int, ids: np.ndarray, sims: np.ndarray) -> None:
+        """Fold candidate (global id, exact sim) pairs into query ``qi``'s
+        pool and raise its bound to the pooled k-th best (once the pool
+        holds k distinct ids)."""
+        if ids.size == 0:
+            return
+        with self._lock:
+            all_ids = np.concatenate([self._ids[qi], ids])
+            all_sims = np.concatenate([self._sims[qi], sims])
+            uniq, first = np.unique(all_ids, return_index=True)
+            usims = all_sims[first]
+            if uniq.size > self.k:
+                keep = np.argpartition(usims, uniq.size - self.k)[
+                    uniq.size - self.k:
+                ]
+                uniq, usims = uniq[keep], usims[keep]
+            self._ids[qi], self._sims[qi] = uniq, usims
+            if uniq.size >= self.k:
+                self.raise_to(qi, float(usims.min()))
+
+
+def prime_ids(n: int, k: int, sample: Optional[int] = None) -> np.ndarray:
+    """Deterministic row sample for bound warm-starting: ``sample`` ids
+    spread evenly across [0, n) (default ``min(n, max(4k, 256))``)."""
+    if sample is None:
+        sample = min(n, max(4 * k, 256))
+    sample = max(1, min(n, sample))
+    return np.unique(
+        np.linspace(0, n - 1, num=sample, dtype=np.int64)
+    )
+
+
+def _local_kth_publisher(bounds: np.ndarray, k: int):
+    """on_done hook: the moment a query fills its local K inside a
+    shard's bounded search, its local k-th (emission order is
+    non-increasing, so the last sim) becomes a live bound for peers."""
+
+    def on_done(qi: int, ids: np.ndarray, sims: np.ndarray) -> None:
+        if sims.size >= k:
+            kth = float(sims[-1])
+            if kth > bounds[qi]:
+                bounds[qi] = kth
+
+    return on_done
+
+
+def _probe_group(group, q_words, k, pool: SharedBound, stats_factory,
+                 enumeration_cap,
+                 on_first_shard=None) -> Dict[int, Tuple[list, list, int]]:
+    """One worker's shard group, probed sequentially under the live
+    shared bound. Within the group the bound chains exactly like the
+    sequential engine (each finished shard's results are pooled and
+    offered before the next shard starts); across groups the bound
+    flows through the shared array — per query, the moment it fills its
+    local K (``on_done``). ``on_first_shard`` fires once the group's
+    first (cold) shard completes — the staggered-start gate."""
+    B = q_words.shape[0]
+    on_done = _local_kth_publisher(pool.bounds, k)
+    out: Dict[int, Tuple[list, list, int]] = {}
+    for s, index in group:
+        st = [stats_factory() for _ in range(B)]
+        launches0 = index.verify_launches
+        results = index.knn_batch_bounded(
+            q_words, k, stop_below=pool.bounds, stats=st,
+            enumeration_cap=enumeration_cap, on_done=on_done,
+        )
+        for qi, (r_ids, r_sims) in enumerate(results):
+            pool.offer(qi, r_ids, r_sims)
+        # launch delta measured where the verifies RAN: a forked worker's
+        # index counters never reach the parent's index objects
+        out[s] = (results, st, index.verify_launches - launches0)
+        if on_first_shard is not None:
+            on_first_shard()
+            on_first_shard = None
+    return out
+
+
+def _await_warm_start(bounds: np.ndarray, floor: np.ndarray, gate,
+                      fraction: float = 0.9,
+                      timeout_s: float = 60.0) -> None:
+    """Bound-aware staggered start: block until ``fraction`` of the
+    queries have had their shared bound raised ABOVE ``floor`` (the
+    pre-probe snapshot — priming counts for nothing here; only a peer's
+    probing publishes tighter values), or the lead worker's cold shard
+    has completed (``gate``), whichever is first. A worker that starts
+    cold probes its first shard unbounded — the expensive regime the
+    sequential chain pays exactly once, for shard 0; the stagger keeps
+    it paid roughly once across the whole pool while everything after
+    still overlaps."""
+    import time as _time
+
+    deadline = _time.perf_counter() + timeout_s
+    while ((bounds > floor).mean() < fraction
+           and not gate()
+           and _time.perf_counter() < deadline):
+        _time.sleep(0.002)
+
+
+def _probe_group_child(group, q_words, k, raw, gate_raw, stats_factory,
+                       enumeration_cap, conn, floor) -> None:
+    """Forked worker body: alias the shared bounds and probe the group,
+    STREAMING each finished shard's results back immediately — the
+    parent folds them into the one global candidate pool and is the
+    single writer of the pooled k-th bounds (per-worker pools would
+    compose only through a max of partial k-ths, a strictly weaker
+    bound). Touches only NumPy and the pipe — never jax — so running in
+    a fork-child of a jax-initialized parent is safe."""
+    lead = floor is None
+    try:
+        bounds = np.frombuffer(raw, dtype=np.float64)
+        if not lead:                     # staggered worker: warm start
+            _await_warm_start(bounds, floor, lambda: gate_raw[0] != 0)
+            on_first = None
+        else:                            # lead worker: opens the gate
+            def on_first():
+                gate_raw[0] = 1
+
+        B = q_words.shape[0]
+        on_done = _local_kth_publisher(bounds, k)
+        for s, index in group:
+            st = [stats_factory() for _ in range(B)]
+            launches0 = index.verify_launches
+            results = index.knn_batch_bounded(
+                q_words, k, stop_below=bounds, stats=st,
+                enumeration_cap=enumeration_cap, on_done=on_done,
+            )
+            conn.send(("shard", s, results, st,
+                       index.verify_launches - launches0))
+            if on_first is not None:
+                on_first()
+                on_first = None
+        conn.send(("done",))
+    except BaseException as e:          # surface the failure to the parent
+        conn.send(("error", e))
+    finally:
+        if lead:
+            # even on failure: staggered peers must not sit out the full
+            # warm-start timeout waiting on a gate that will never open
+            gate_raw[0] = 1
+        conn.close()
+
+
+def _partition(entries, workers: int):
+    """Round-robin shard groups of near-equal row totals (shards are
+    already balanced, so round-robin by position is enough)."""
+    groups = [entries[w::workers] for w in range(workers)]
+    return [g for g in groups if g]
+
+
+def probe_shards_parallel(
+    indexes,
+    q_words: np.ndarray,
+    k: int,
+    shared: SharedBound,
+    stats_factory,
+    enumeration_cap: Optional[int] = None,
+    max_workers: Optional[int] = None,
+    mode: str = "auto",
+) -> Dict[int, Tuple[list, list]]:
+    """Probe every (shard_id, AMIHIndex) concurrently under the shared
+    bound. Returns shard_id -> (per-query results, per-query stats,
+    verify-launch delta); callers fold in shard-id order so merged stats
+    stay deterministic.
+
+    Shards are partitioned into at most ``min(max_workers, cpu_count)``
+    groups, one worker each: more workers than cores cannot probe faster
+    but DOES weaken the bound (a shard only sees peers' bounds once
+    their queries complete, so oversubscription just multiplies
+    un-pruned starts), and in process mode each worker is one fork.
+    Within a group the bound chains sequentially, exactly like the PR 3
+    engine; across groups it flows live through ``shared.bounds``.
+    """
+    mode = resolve_probe_mode(mode)
+    entries = list(indexes)
+    workers = max(1, min(
+        max_workers or len(entries),
+        len(entries),
+        multiprocessing.cpu_count(),
+    ))
+    groups = _partition(entries, workers)
+
+    if len(groups) == 1:
+        return _probe_group(
+            entries, q_words, k, shared, stats_factory, enumeration_cap
+        )
+
+    # pre-probe bound snapshot: later workers stagger on bounds raised
+    # ABOVE this floor by the lead worker's first shard (priming does
+    # not count), with the lead's cold-shard completion as the fallback
+    floor = shared.bounds.copy()
+
+    if mode == "thread":
+        gate = threading.Event()
+
+        def probe_entry(item):
+            w, group = item
+            if w > 0:
+                _await_warm_start(shared.bounds, floor, gate.is_set)
+                return _probe_group(
+                    group, q_words, k, shared, stats_factory,
+                    enumeration_cap,
+                )
+            try:
+                return _probe_group(
+                    group, q_words, k, shared, stats_factory,
+                    enumeration_cap, on_first_shard=gate.set,
+                )
+            finally:
+                gate.set()   # even on failure: unblock staggered peers
+
+        out: Dict[int, Tuple[list, list, int]] = {}
+        with ThreadPoolExecutor(
+            max_workers=len(groups), thread_name_prefix="shard-probe"
+        ) as pool:
+            for part in pool.map(probe_entry, enumerate(groups)):
+                out.update(part)
+        return out
+
+    if shared.raw is None:
+        raise ValueError(
+            "process mode needs SharedBound(shared_memory=True)"
+        )
+    from multiprocessing.connection import wait as mp_wait
+
+    ctx = multiprocessing.get_context("fork")
+    gate_raw = ctx.RawArray("b", 1)     # lead worker's cold-shard flag
+    procs = []
+    for w, group in enumerate(groups):
+        parent_conn, child_conn = ctx.Pipe(duplex=False)
+        # fork start method: args are inherited, never pickled — the
+        # child gets the built indexes copy-on-write
+        proc = ctx.Process(
+            target=_probe_group_child,
+            args=(group, q_words, k, shared.raw, gate_raw, stats_factory,
+                  enumeration_cap, child_conn, floor if w else None),
+            daemon=True,
+        )
+        with warnings.catch_warnings():
+            # jax warns that a fork-child using jax may deadlock; these
+            # children are numpy-only by construction (_probe_group_child)
+            warnings.filterwarnings(
+                "ignore", message=".*os.fork.*", category=RuntimeWarning
+            )
+            proc.start()
+        child_conn.close()
+        procs.append((proc, parent_conn))
+    # The parent is the pooling thread: it folds streamed per-shard
+    # results into THE global candidate pool and is the single writer
+    # of the pooled per-query k-th bounds (children still publish their
+    # local k-ths via on_done — aligned 8-byte stores, monotone, safe).
+    out: Dict[int, Tuple[list, list, int]] = {}
+    failure: Optional[BaseException] = None
+    live = {conn: proc for proc, conn in procs}
+    while live:
+        for conn in mp_wait(list(live)):
+            try:
+                msg = conn.recv()
+            except EOFError:            # worker died without reporting
+                gate_raw[0] = 1         # (hard kill skips its finally)
+                del live[conn]
+                conn.close()
+                continue
+            if msg[0] == "shard":
+                _, s, results, st, launches = msg
+                out[s] = (results, st, launches)
+                for qi, (r_ids, r_sims) in enumerate(results):
+                    shared.offer(qi, r_ids, r_sims)
+            elif msg[0] == "error":
+                failure = failure or msg[1]
+                gate_raw[0] = 1         # never strand staggered peers
+                del live[conn]
+                conn.close()
+            else:                       # "done"
+                del live[conn]
+                conn.close()
+    for proc, _ in procs:
+        proc.join(timeout=30)
+    if failure is not None:
+        raise failure
+    if len(out) != len(entries):
+        missing = sorted(set(s for s, _ in entries) - set(out))
+        raise RuntimeError(
+            f"shard probe worker died without reporting shards {missing}"
+        )
+    return out

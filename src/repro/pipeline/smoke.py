@@ -1,0 +1,69 @@
+"""Fast pipelined-vs-sequential smoke check (wired into scripts/verify.sh).
+
+    PYTHONPATH=src python -m repro.pipeline.smoke
+
+Runs in seconds: a small clustered workload is answered by the pipelined
+paths (AMIH verify/probe overlap, shard-parallel probing with the shared
+warm-started bound, the two-stage streaming loop) and every result is
+asserted bit-identical to its sequential counterpart and to the exact
+linear scan. This is the cheap end-to-end canary for the subsystem — the
+full property sweep lives in tests/test_pipeline.py.
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def main() -> int:
+    from ..core import linear_scan_knn, make_engine, pack_bits
+    from ..data import synthetic_binary_codes, synthetic_queries
+    from .stream import stream_search
+
+    t0 = time.perf_counter()
+    p, n, B, k, S = 64, 1200, 16, 10, 8
+    db_bits = synthetic_binary_codes(n, p, seed=0)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=1))
+    qs[1] = 0  # zero-norm query rides along
+    ref = [linear_scan_knn(qs[i], db, k)[1] for i in range(B)]
+
+    def check(tag, engine):
+        ids, sims, _ = engine.knn_batch(qs, k)
+        for i in range(B):
+            np.testing.assert_array_equal(sims[i], ref[i])
+        print(f"  {tag}: exact")
+        return engine
+
+    seq = check("amih sequential   ", make_engine("amih", db, p))
+    check("amih overlap      ",
+          make_engine("amih", db, p, overlap_verify=True))
+    check("sharded sequential",
+          make_engine("sharded_amih", db, p, num_shards=S))
+    par = make_engine("sharded_amih", db, p, num_shards=S, probe_workers=S)
+    # tiny smoke DB / 2-core CI host: force the pool past its adaptive
+    # stand-down gates so the smoke actually exercises it
+    par.PARALLEL_MIN_SHARD_ROWS = 0
+    par.PARALLEL_MIN_CPUS = 0
+    par.PARALLEL_MIN_BATCH = 0
+    assert par._use_parallel(B)
+    check("sharded parallel  ", par)
+
+    # streaming loop over the sequential engine: per-step results in
+    # order, latency counters present, same sims
+    steps = list(stream_search(seq, [qs[:8], qs[8:]], k))
+    got = np.concatenate([sr.sims for sr in steps])
+    for i in range(B):
+        np.testing.assert_array_equal(got[i], ref[i])
+    assert all("p50" in sr.stats.latency_ms for sr in steps)
+    assert steps[0].stats.queue_depth == 8
+    print(f"  stream_search     : exact, latency counters present")
+    print(f"pipeline smoke OK in {time.perf_counter() - t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

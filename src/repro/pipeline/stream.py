@@ -1,0 +1,188 @@
+"""Streaming search serving: tickets, per-step results, latency counters.
+
+``stream_search`` drives a ``SearchEngine`` over a sequence of query
+batches through a two-stage pipeline (encode -> search) and yields a
+``StepResult`` per batch step AS IT COMPLETES — batch ``i+1`` encodes on
+the device while batch ``i`` probes on the host, and callers consume
+results while later steps are still in flight. This is the serving loop
+of ``RetrievalService.run_queued(stream=True)``; the serving benchmark
+drives it directly over pre-packed codes (identity encode).
+
+``Ticket`` is the handle ``RetrievalService.submit`` returns: an
+int-compatible query id (old callers that used the qid as a dict key
+keep working unchanged) carrying a ``concurrent.futures.Future`` that
+resolves to ``(ids, sims)`` when the query's batch step completes, plus
+its submission timestamp for queueing-latency accounting.
+
+Each yielded step's ``EngineStats`` carries the serving-side counters:
+``queue_depth`` (queries still waiting behind this step) and
+``latency_ms`` (rolling p50/p99 over answered queries).
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .stages import Stage, StagedExecutor
+
+__all__ = ["LatencyTracker", "StepResult", "Ticket", "stream_search"]
+
+
+class Ticket:
+    """Handle for one submitted query: an int-compatible qid plus a
+    future resolving to ``(ids, sims)``. Hashes and compares equal to its
+    qid, so dicts keyed by the old integer qids accept tickets and vice
+    versa."""
+
+    __slots__ = ("qid", "future", "submitted_at")
+
+    def __init__(self, qid: int):
+        self.qid = qid
+        self.future: Future = Future()
+        self.submitted_at = time.perf_counter()
+
+    def result(self, timeout: Optional[float] = None):
+        """Block until the query's batch step completes; returns
+        (ids, sims)."""
+        return self.future.result(timeout)
+
+    def __int__(self) -> int:
+        return self.qid
+
+    __index__ = __int__
+
+    def __hash__(self) -> int:
+        return hash(self.qid)
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, Ticket):
+            return self.qid == other.qid
+        if isinstance(other, int):
+            return self.qid == other
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        state = "done" if self.future.done() else "pending"
+        return f"Ticket(qid={self.qid}, {state})"
+
+
+class LatencyTracker:
+    """Rolling latency percentiles over answered queries (thread-safe).
+
+    Keeps the most recent ``window`` samples — serving dashboards want
+    recent p50/p99, not all-time — and snapshots them into the dict that
+    lands on ``EngineStats.latency_ms``.
+    """
+
+    def __init__(self, window: int = 4096):
+        self.window = window
+        self._samples: List[float] = []
+        self._count = 0
+        self._lock = threading.Lock()
+
+    def record(self, ms: float, count: int = 1) -> None:
+        with self._lock:
+            self._samples.extend([float(ms)] * count)
+            self._count += count
+            if len(self._samples) > self.window:
+                del self._samples[: len(self._samples) - self.window]
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    def snapshot(self) -> Dict[str, float]:
+        """{"p50": ..., "p99": ..., "mean": ..., "count": ...} in ms over
+        the current window; empty dict before the first sample."""
+        with self._lock:
+            if not self._samples:
+                return {}
+            arr = np.asarray(self._samples, dtype=np.float64)
+            return {
+                "p50": round(float(np.percentile(arr, 50)), 4),
+                "p99": round(float(np.percentile(arr, 99)), 4),
+                "mean": round(float(arr.mean()), 4),
+                "count": float(self._count),
+            }
+
+
+@dataclass
+class StepResult:
+    """One completed batch step of a streaming search."""
+
+    step: int                     # step index in submission order
+    ids: np.ndarray               # (B_step, k')
+    sims: np.ndarray              # (B_step, k')
+    stats: Any                    # EngineStats with serving counters set
+    latency_ms: float             # enqueue -> completion for this step
+    # service-level view (filled by RetrievalService): qid -> (ids, sims)
+    results: Dict[int, Tuple[np.ndarray, np.ndarray]] = field(
+        default_factory=dict
+    )
+
+
+def stream_search(
+    engine,
+    batches: Sequence,
+    k: int,
+    encode: Optional[Callable[[Any], np.ndarray]] = None,
+    window: Optional[int] = None,
+    tracker: Optional[LatencyTracker] = None,
+    stamp_latency: bool = True,
+) -> Iterator[StepResult]:
+    """Pipeline ``batches`` through encode -> ``engine.knn_batch`` and
+    yield a ``StepResult`` per batch, in order, as each completes.
+
+    ``batches`` is a sequence of per-step payloads; ``encode`` maps a
+    payload to packed (B, W) query words (None: payloads are already
+    packed). Encoding of step ``i+1`` overlaps the search of step ``i``
+    (one worker thread each, see stages.StagedExecutor). Per-step
+    latency is measured from pipeline enqueue to step completion and
+    recorded per query into ``tracker`` (a fresh one unless provided);
+    ``stamp_latency=False`` skips that and leaves ``stats.latency_ms``
+    untouched for callers that stamp their own definition (the
+    retrieval service uses true submit -> resolve latency).
+    """
+    batches = list(batches)
+    tracker = tracker or LatencyTracker()
+    # queries waiting strictly behind step i (queue depth when i answers)
+    sizes = [len(b) for b in batches]
+    behind = np.concatenate([np.cumsum(sizes[::-1])[::-1][1:], [0]]) \
+        if sizes else np.zeros(0)
+    enqueue_t: Dict[int, float] = {}
+
+    def _enc(item):
+        i, payload = item
+        q = payload if encode is None else encode(payload)
+        return i, q
+
+    def _search(item):
+        i, q = item
+        ids, sims, stats = engine.knn_batch(q, k)
+        return i, ids, sims, stats
+
+    def _feed():
+        for i, payload in enumerate(batches):
+            enqueue_t[i] = time.perf_counter()
+            yield (i, payload)
+
+    with StagedExecutor(
+        [Stage("encode", _enc), Stage("search", _search)],
+        window=window, name="serve",
+    ) as ex:
+        for i, ids, sims, stats in ex.map(_feed()):
+            lat_ms = 1e3 * (time.perf_counter() - enqueue_t[i])
+            stats.queue_depth = int(behind[i])
+            if stamp_latency:
+                tracker.record(lat_ms, count=max(1, ids.shape[0]))
+                stats.latency_ms = tracker.snapshot()
+            yield StepResult(
+                step=i, ids=ids, sims=sims, stats=stats,
+                latency_ms=lat_ms,
+            )

@@ -17,12 +17,25 @@ serving shape (probing-sequence sharing amortizes across the batch).
 learns/applies AQBC, packs codes, builds the engine. ``search_batch``
 answers a batch of queries in one engine call; ``search`` is the B=1
 convenience; ``submit``/``run_queued`` expose the queued serving loop.
+
+Queued serving is asynchronous and streamable (repro.pipeline):
+``submit`` is thread-safe and returns a ``Ticket`` (int-compatible qid +
+a future resolving to that query's (ids, sims));
+``run_queued(stream=True)`` yields one ``StepResult`` per batch step as
+it completes, encoding batch i+1 on the device while batch i searches,
+with queue-depth and p50/p99 latency counters on each step's
+``EngineStats``. ``RetrievalConfig.pipelined=True`` additionally turns
+on the engine-level pipelining (AMIH verify/probe overlap,
+shard-parallel probing) for the backends that support it.
 """
 
 from __future__ import annotations
 
+import threading
+import time
+from concurrent.futures import Future
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Iterator, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +45,7 @@ from ..core import EngineStats, SearchEngine, linear_scan_knn, make_engine, pack
 from ..core import aqbc
 from ..models import Model
 from ..models.common import ArchConfig
+from ..pipeline.stream import LatencyTracker, StepResult, Ticket, stream_search
 
 __all__ = ["RetrievalConfig", "RetrievalService"]
 
@@ -65,6 +79,13 @@ class RetrievalConfig:
     mesh: Optional[object] = None
     num_shards: Optional[int] = None
     shard_axes: Optional[Tuple[str, ...]] = None
+    # Engine-level pipelining (repro.pipeline): "amih" gets the tuple-step
+    # verify/probe overlap (overlap_verify), "sharded_amih" gets
+    # shard-parallel probing under the shared warm-started bound
+    # (probe_workers; None -> one worker per shard). Results stay
+    # bit-identical to the sequential engines.
+    pipelined: bool = False
+    probe_workers: Optional[int] = None
 
     @property
     def engine(self) -> str:
@@ -83,8 +104,17 @@ class RetrievalService:
     rotation: Optional[jax.Array] = None
     db_words: Optional[np.ndarray] = None
     shift: Optional[np.ndarray] = None   # non-negativity shift, fit at build
-    _queue: List[Tuple[int, np.ndarray]] = field(default_factory=list)
+    _queue: List[Tuple[Ticket, np.ndarray]] = field(default_factory=list)
     _next_qid: int = 0
+    # guards _queue/_next_qid: submit may be called from many request
+    # threads while run_queued drains (the streaming serving shape)
+    _lock: threading.Lock = field(
+        default_factory=threading.Lock, repr=False
+    )
+    # rolling submit->resolve latency over answered queries (ms)
+    _latency: LatencyTracker = field(
+        default_factory=LatencyTracker, repr=False
+    )
     # jitted pooled-encoder forward, built once on first embed(): a fresh
     # @jax.jit closure per call would retrace+recompile on every batched
     # serving step (embed is the hot path of run_queued)
@@ -167,6 +197,7 @@ class RetrievalService:
                 "m": self.rcfg.m_tables,
                 "verify_backend": self.rcfg.verify_backend,
                 "enumeration_cap": self.rcfg.enumeration_cap,
+                "overlap_verify": self.rcfg.pipelined,
             }
         elif self.rcfg.backend == "linear_scan":
             cfg = {"compute_backend": self.rcfg.compute_backend}
@@ -180,10 +211,15 @@ class RetrievalService:
                 "m": self.rcfg.m_tables,
                 "verify_backend": self.rcfg.verify_backend,
                 "enumeration_cap": self.rcfg.enumeration_cap,
+                "probe_workers": self.rcfg.probe_workers,
             }
         self.engine = make_engine(
             self.rcfg.backend, self.db_words, self.rcfg.code_bits, **cfg
         )
+        if (self.rcfg.backend == "sharded_amih" and self.rcfg.pipelined
+                and self.rcfg.probe_workers is None):
+            # pipelined default: one probe worker per (non-empty) shard
+            self.engine.probe_workers = len(self.engine.indexes)
         index = getattr(self.engine, "index", None)
         return {
             "n_docs": float(len(doc_tokens)),
@@ -222,31 +258,113 @@ class RetrievalService:
         return ids[0], sims[0], stats.per_query[0]
 
     # ------------------------------------------------------ queued serving
-    def submit(self, query_tokens: np.ndarray) -> int:
-        """Enqueue a query for the next batched search step; returns qid."""
-        qid = self._next_qid
-        self._next_qid += 1
-        self._queue.append((qid, np.asarray(query_tokens)))
-        return qid
+    def submit(self, query_tokens: np.ndarray) -> Ticket:
+        """Enqueue a query for the next batched search step (thread-safe).
 
-    def run_queued(
-        self, k: int = 10
-    ) -> Dict[int, Tuple[np.ndarray, np.ndarray]]:
-        """Drain the queue, ``search_batch_size`` queries per knn_batch
-        step (the serving loop's batched shape). Returns qid -> (ids, sims).
+        Returns a ``Ticket``: an int-compatible qid (old callers keep
+        indexing result dicts with it) whose ``future`` resolves to this
+        query's (ids, sims) when its batch step completes.
         """
+        toks = np.asarray(query_tokens)
+        with self._lock:
+            ticket = Ticket(self._next_qid)
+            self._next_qid += 1
+            self._queue.append((ticket, toks))
+        return ticket
+
+    def queue_depth(self) -> int:
+        """Queries currently waiting for a ``run_queued`` drain."""
+        with self._lock:
+            return len(self._queue)
+
+    def run_queued(self, k: int = 10, stream: bool = False):
+        """Drain the queue, ``search_batch_size`` queries per knn_batch
+        step (the serving loop's batched shape).
+
+        ``stream=False`` (default): blocks until the drain completes and
+        returns qid -> (ids, sims), as before.
+
+        ``stream=True``: returns an iterator of ``StepResult``s, one per
+        batch step, yielded AS EACH STEP COMPLETES — step i+1 encodes on
+        the device while step i searches (repro.pipeline.stream). Every
+        step's ``EngineStats`` carries ``queue_depth`` and rolling
+        p50/p99 ``latency_ms`` over answered queries (measured
+        submit -> resolve); each answered ticket's future is resolved
+        before its step is yielded.
+
+        Queries submitted after the drain snapshot wait for the next
+        ``run_queued`` call. If a step raises, unanswered queries are
+        re-queued for a retry; their tickets' CURRENT futures fail with
+        the step's exception (a blocked ``ticket.result()`` observes the
+        dead drain instead of hanging) and are replaced with fresh ones
+        that a successful retry drain resolves.
+        """
+        if stream:
+            return self._run_queued_stream(k)
         out: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
-        step = max(1, self.rcfg.search_batch_size)
-        while self._queue:
-            batch = self._queue[:step]
-            toks = np.stack([t for _, t in batch])
-            ids, sims, _ = self.search_batch(toks, k)
-            # pop only after the step succeeded, so a raise mid-drain
-            # leaves the unanswered queries queued for a retry
-            self._queue = self._queue[step:]
-            for row, (qid, _) in enumerate(batch):
-                out[qid] = (ids[row], sims[row])
+        for step in self._run_queued_stream(k):
+            out.update(step.results)
         return out
+
+    def _run_queued_stream(self, k: int) -> Iterator[StepResult]:
+        assert self.engine is not None, "call build_index first"
+        step_size = max(1, self.rcfg.search_batch_size)
+        with self._lock:
+            pending = self._queue
+            self._queue = []
+        steps = [
+            pending[lo : lo + step_size]
+            for lo in range(0, len(pending), step_size)
+        ]
+        done_steps = 0
+        try:
+            results = stream_search(
+                self.engine,
+                [np.stack([t for _, t in batch]) for batch in steps],
+                k,
+                encode=self.encode_query,
+                stamp_latency=False,   # stamped below: submit -> resolve
+            )
+            for sr in results:
+                now = time.perf_counter()
+                batch = steps[sr.step]
+                for row, (ticket, _) in enumerate(batch):
+                    pair = (sr.ids[row], sr.sims[row])
+                    sr.results[ticket.qid] = pair
+                    self._latency.record(
+                        1e3 * (now - ticket.submitted_at)
+                    )
+                    ticket.future.set_result(pair)
+                # serving-level counters: true submit->resolve latency
+                # and the queries still waiting behind this step
+                sr.stats.latency_ms = self._latency.snapshot()
+                sr.stats.queue_depth += self.queue_depth()
+                done_steps += 1
+                yield sr
+        except GeneratorExit:
+            # the CONSUMER abandoned the iterator early — nothing failed.
+            # Re-queue the unanswered queries with their futures left
+            # pending; the next drain resolves them.
+            self._requeue(steps[done_steps:])
+            raise
+        except BaseException as exc:
+            # a step actually died: unanswered queries go back to the
+            # queue's front for a retry; their current futures FAIL (a
+            # waiter blocked in ticket.result() must observe the dead
+            # drain, not hang) and are replaced with fresh ones that the
+            # retry drain resolves — futures are single-shot.
+            requeued = self._requeue(steps[done_steps:])
+            for ticket, _ in requeued:
+                failed, ticket.future = ticket.future, Future()
+                failed.set_exception(exc)
+            raise
+
+    def _requeue(self, unanswered_steps):
+        """Push un-drained batches back onto the queue's front."""
+        requeued = [item for batch in unanswered_steps for item in batch]
+        with self._lock:
+            self._queue[:0] = requeued
+        return requeued
 
     def search_linear(self, query_tokens: np.ndarray, k: int = 10):
         """Exhaustive baseline over the same codes (cross-check)."""

@@ -243,16 +243,54 @@ class ShardedScanEngine(SearchEngine):
 class ShardedAMIHEngine(SearchEngine):
     """AMIH over a row-sharded DB: one shard-local index per slice,
     sequential probing with the pooled k-th cosine as each next shard's
-    early-termination bound, exact lexsort merge."""
+    early-termination bound, exact lexsort merge.
+
+    ``probe_workers`` switches shard probing from the sequential chain to
+    the pipelined shard pool (repro.pipeline.shardpool): every shard
+    probes concurrently — forked worker processes by default (the
+    probing loop is too GIL-bound for threads on CPython;
+    ``probe_mode="thread"`` selects the pool for free-threaded runtimes)
+    — all reading ONE shared monotone per-query bound that every query
+    raises the moment it fills its local K, and that ``prime_bound``
+    warm-starts with the exact sims of a small deterministic row sample
+    before any probing begins (the sequential chain gives shard 0 no
+    bound at all). Still exact: the shared bound is always the k-th best
+    sim of some subset of real rows, hence a valid lower bound on the
+    global k-th (see shardpool.py).
+    """
 
     name = "sharded_amih"
 
-    def __init__(self, db_words, p, plan, indexes, enumeration_cap):
+    # Adaptive stand-down gates: the parallel pool only engages when the
+    # host and the call can actually pay for it; everything else runs
+    # the sequential chain (identical results — the pool is a schedule,
+    # not an algorithm). Instance attributes, so tests/benches force the
+    # pool on small fixtures by zeroing them.
+    #   MIN_SHARD_ROWS — tiny shards are pure Python overhead (small
+    #     buckets, no GIL-releasing bulk NumPy); worker startup plus the
+    #     pool's weaker early bounds cost more than concurrency returns.
+    #   MIN_CPUS — measured on a 2-HT-sibling host: the probing mix gets
+    #     ~1.0x from a second hardware thread while fork/IPC and the
+    #     pool's extra unbounded starts are pure cost, so below a real
+    #     multicore the pool cannot win.
+    #   MIN_BATCH — per-call worker startup (forks in process mode)
+    #     amortizes over the batch; a 1-query call pays it all alone.
+    PARALLEL_MIN_SHARD_ROWS = 4096
+    PARALLEL_MIN_CPUS = 4
+    PARALLEL_MIN_BATCH = 8
+
+    def __init__(self, db_words, p, plan, indexes, enumeration_cap,
+                 probe_workers: Optional[int] = None,
+                 prime_bound: bool = True,
+                 probe_mode: str = "auto"):
         self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
         self.p = p
         self.plan = plan
         self.indexes = indexes      # [(shard_id, AMIHIndex)] non-empty shards
         self.enumeration_cap = enumeration_cap
+        self.probe_workers = probe_workers
+        self.prime_bound = prime_bound
+        self.probe_mode = probe_mode
 
     @classmethod
     def build(
@@ -266,6 +304,9 @@ class ShardedAMIHEngine(SearchEngine):
         m: Optional[int] = None,
         verify_backend: str = "numpy",
         enumeration_cap: Optional[int] = None,
+        probe_workers: Optional[int] = None,
+        prime_bound: bool = True,
+        probe_mode: str = "auto",
         **cfg: Any,
     ) -> "ShardedAMIHEngine":
         if cfg:
@@ -280,11 +321,28 @@ class ShardedAMIHEngine(SearchEngine):
                 db[plan.shard_slice(s)], p, m=m,
                 verify_backend=verify_backend, id_offset=plan.starts[s],
             )))
-        return cls(db, p, plan, indexes, enumeration_cap)
+        return cls(db, p, plan, indexes, enumeration_cap,
+                   probe_workers, prime_bound, probe_mode)
 
     @property
     def n(self) -> int:
         return self.db_words.shape[0]
+
+    def _use_parallel(self, B: int) -> bool:
+        import multiprocessing
+
+        # mean rows per non-empty shard: robust to one straggler shard
+        # in an otherwise-large custom plan (min would stand the pool
+        # down) without letting one big shard drag seven tiny ones into
+        # worker startup they can't amortize (max would engage it)
+        mean_rows = self.n / max(1, len(self.indexes))
+        return bool(
+            self.probe_workers and self.probe_workers > 1
+            and len(self.indexes) > 1
+            and B >= self.PARALLEL_MIN_BATCH
+            and multiprocessing.cpu_count() >= self.PARALLEL_MIN_CPUS
+            and mean_rows >= self.PARALLEL_MIN_SHARD_ROWS
+        )
 
     def knn_batch(self, q_words, k):
         q = self._check_queries(q_words, self.p)
@@ -298,19 +356,19 @@ class ShardedAMIHEngine(SearchEngine):
                             per_query=per_query,
                             shards=self.plan.num_shards),
             )
+        if self._use_parallel(B):
+            shard_out = self._probe_parallel(q, k_eff)
+        else:
+            shard_out = self._probe_sequential(q, k_eff)
+
         per_shard: List[Dict[str, int]] = []
         gid_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
         sim_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
-        bounds = np.full(B, -np.inf)
-
+        # fold in shard-id order regardless of probing order, so merged
+        # stats and results are deterministic either way
         for s, index in self.indexes:
+            results, shard_stats, launches = shard_out[s]
             local_k = min(k_eff, index.n)
-            shard_stats = [AMIHStats() for _ in range(B)]
-            launches0 = index.verify_launches
-            results = index.knn_batch_bounded(
-                q, k_eff, stop_below=bounds, stats=shard_stats,
-                enumeration_cap=self.enumeration_cap,
-            )
             early_stopped = 0
             for i, (r_ids, r_sims) in enumerate(results):
                 if r_ids.size < local_k:
@@ -318,20 +376,13 @@ class ShardedAMIHEngine(SearchEngine):
                 if r_ids.size:
                     gid_parts[i].append(r_ids)
                     sim_parts[i].append(r_sims)
-                total = sum(a.size for a in sim_parts[i])
-                if total >= k_eff:
-                    pool = np.concatenate(sim_parts[i]) if \
-                        len(sim_parts[i]) > 1 else sim_parts[i][0]
-                    # pooled k-th best cosine: sims strictly below it can
-                    # never enter the global top-K of query i
-                    bounds[i] = np.partition(pool, total - k_eff)[
-                        total - k_eff
-                    ]
                 self._fold_stats(per_query[i], shard_stats[i])
             agg: Dict[str, int] = {
                 "shard": s,
                 "rows": index.n,
-                "launches": index.verify_launches - launches0,
+                # measured where the verifies ran (forked workers'
+                # index counters never reach the parent's objects)
+                "launches": launches,
                 "early_stopped": early_stopped,
             }
             for counter in ("probes", "retrieved", "verified",
@@ -356,6 +407,71 @@ class ShardedAMIHEngine(SearchEngine):
             shards=self.plan.num_shards, per_shard=per_shard,
         )
         return ids_out, sims_out, stats
+
+    def _probe_sequential(self, q, k_eff):
+        """PR 3's chain: shards probed one after another, each next shard
+        bounded by the pooled k-th cosine of everything seen so far."""
+        B = q.shape[0]
+        shard_out: Dict[int, Tuple[list, list, int]] = {}
+        sim_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
+        bounds = np.full(B, -np.inf)
+        for s, index in self.indexes:
+            shard_stats = [AMIHStats() for _ in range(B)]
+            launches0 = index.verify_launches
+            results = index.knn_batch_bounded(
+                q, k_eff, stop_below=bounds, stats=shard_stats,
+                enumeration_cap=self.enumeration_cap,
+            )
+            for i, (r_ids, r_sims) in enumerate(results):
+                if r_ids.size:
+                    sim_parts[i].append(r_sims)
+                total = sum(a.size for a in sim_parts[i])
+                if total >= k_eff:
+                    pool = np.concatenate(sim_parts[i]) if \
+                        len(sim_parts[i]) > 1 else sim_parts[i][0]
+                    # pooled k-th best cosine: sims strictly below it can
+                    # never enter the global top-K of query i
+                    bounds[i] = np.partition(pool, total - k_eff)[
+                        total - k_eff
+                    ]
+            shard_out[s] = (results, shard_stats,
+                            index.verify_launches - launches0)
+        return shard_out
+
+    def _probe_parallel(self, q, k_eff):
+        """Pipelined shard pool: all shards probe concurrently under one
+        shared monotone bound, warm-started from a row sample."""
+        from ..pipeline.shardpool import (
+            SharedBound,
+            prime_ids,
+            probe_shards_parallel,
+            resolve_probe_mode,
+        )
+
+        B = q.shape[0]
+        mode = resolve_probe_mode(self.probe_mode)
+        if mode == "process" and any(
+            ix.verify_backend == "pallas" for _, ix in self.indexes
+        ):
+            # a fork-child of a jax-initialized parent must never
+            # dispatch jax ops (deadlock risk); device verification also
+            # releases the GIL, so threads are the right pool there
+            mode = "thread"
+        shared = SharedBound(
+            B, k_eff, shared_memory=(mode == "process")
+        )
+        if self.prime_bound:
+            sample = prime_ids(self.n, k_eff)
+            for i in range(B):
+                shared.offer(i, sample, sims_for_ids(
+                    q[i], self.db_words, sample
+                ))
+        return probe_shards_parallel(
+            self.indexes, q, k_eff, shared, AMIHStats,
+            enumeration_cap=self.enumeration_cap,
+            max_workers=self.probe_workers,
+            mode=mode,
+        )
 
     @staticmethod
     def _fold_stats(into: AMIHStats, src: AMIHStats) -> None:

@@ -1,0 +1,327 @@
+"""The async pipelined serving subsystem (repro.pipeline): every
+pipelined path — AMIH verify/probe overlap, shard-parallel probing under
+the shared monotone bound (process and thread modes), and the streaming
+serving loop — returns bit-identical results to its sequential
+counterpart and to ``linear_scan_knn``; the shared-bound search never
+returns worse than the exact k-th cosine; the StagedExecutor pipelines in
+order; ``RetrievalService.submit`` is thread-safe and streaming serving
+resolves tickets with latency counters."""
+
+import time
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import linear_scan_knn, make_engine, pack_bits
+from repro.core.linear_scan import sims_against_db
+from repro.data import synthetic_binary_codes, synthetic_queries
+from repro.pipeline import (
+    SharedBound,
+    Stage,
+    StagedExecutor,
+    Ticket,
+    prime_ids,
+    stream_search,
+)
+
+ALL_BACKENDS = (
+    "linear_scan", "single_table", "amih", "sharded_scan", "sharded_amih"
+)
+
+
+def _force_pool(eng):
+    """Zero the adaptive stand-down gates so small test fixtures (and
+    this 2-core CI host) actually exercise the parallel pool."""
+    eng.PARALLEL_MIN_SHARD_ROWS = 0
+    eng.PARALLEL_MIN_CPUS = 0
+    eng.PARALLEL_MIN_BATCH = 0
+    return eng
+
+
+def _pipelined_engine(backend, db, p):
+    """The backend's pipelined build (engines without an engine-level
+    pipelined mode are served through the streaming loop instead)."""
+    if backend == "amih":
+        return make_engine("amih", db, p, overlap_verify=True)
+    if backend == "sharded_amih":
+        return _force_pool(make_engine(
+            "sharded_amih", db, p, num_shards=4, probe_workers=4
+        ))
+    if backend == "sharded_scan":
+        return make_engine("sharded_scan", db, p, num_shards=4)
+    return make_engine(backend, db, p)
+
+
+def _check_exact(ids, sims, qs, db, k_eff):
+    """Exact vs the scan, as a multiset: sims rows are compared SORTED
+    because AMIH emits in exact-rational tuple order, which can disagree
+    with the scan's float64 sort by one ulp when two DISTINCT tuples'
+    sims collide in float64 (pre-existing sequential behavior — the
+    pipelined-vs-sequential checks elsewhere stay bitwise). Every
+    returned id still carries its true sim, bit-exact."""
+    B = qs.shape[0]
+    assert ids.shape == (B, k_eff) and sims.shape == (B, k_eff)
+    for i in range(B):
+        _, sims_l = linear_scan_knn(qs[i], db, k_eff)
+        np.testing.assert_array_equal(np.sort(sims[i])[::-1], sims_l)
+        all_sims = sims_against_db(qs[i], db)
+        np.testing.assert_array_equal(all_sims[ids[i]], sims[i])
+
+
+# ------------------------------------------------- pipelined == sequential
+@given(
+    B=st.sampled_from([1, 8, 64]),
+    n=st.integers(30, 300),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=6, deadline=None)
+def test_pipelined_exact_all_backends(B, n, k, seed):
+    """Every backend, served pipelined (engine-level pipelining where it
+    exists, the streaming loop everywhere), stays bit-identical to
+    linear_scan_knn — B in {1, 8, 64}, K > shard rows included via small
+    n with 4 shards."""
+    p = 64
+    db_bits = synthetic_binary_codes(n, p, seed=seed)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=seed + 1))
+    db = pack_bits(db_bits)
+    k_eff = min(k, n)
+    for backend in ALL_BACKENDS:
+        eng = _pipelined_engine(backend, db, p)
+        ids, sims, _ = eng.knn_batch(qs, k)
+        _check_exact(ids, sims, qs, db, k_eff)
+        # streamed serving over the same engine: same rows, in order
+        step = max(1, B // 2)
+        batches = [qs[lo : lo + step] for lo in range(0, B, step)]
+        got = np.concatenate(
+            [sr.sims for sr in stream_search(eng, batches, k)]
+        )
+        np.testing.assert_array_equal(got, sims)
+
+
+def test_overlap_matches_sequential_amih_bit_identical():
+    p, n, B, k = 64, 400, 16, 10
+    db_bits = synthetic_binary_codes(n, p, seed=3)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=4))
+    qs[2] = 0                                  # zero-norm query rides along
+    db = pack_bits(db_bits)
+    e_seq = make_engine("amih", db, p)
+    e_ovl = make_engine("amih", db, p, overlap_verify=True)
+    ids_s, sims_s, _ = e_seq.knn_batch(qs, k)
+    ids_o, sims_o, _ = e_ovl.knn_batch(qs, k)
+    np.testing.assert_array_equal(ids_s, ids_o)
+    np.testing.assert_array_equal(sims_s, sims_o)
+    assert np.all(sims_o[2] == 0.0)
+
+
+def test_overlap_matches_sequential_pallas_verify():
+    """Overlap composes with the device verify backend (the worker issues
+    the non-blocking grouped launch)."""
+    p, n, B, k = 96, 150, 6, 7
+    db_bits = synthetic_binary_codes(n, p, seed=5)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=6))
+    db = pack_bits(db_bits)
+    e_seq = make_engine("amih", db, p, verify_backend="pallas")
+    e_ovl = make_engine(
+        "amih", db, p, verify_backend="pallas", overlap_verify=True
+    )
+    ids_s, sims_s, _ = e_seq.knn_batch(qs, k)
+    ids_o, sims_o, _ = e_ovl.knn_batch(qs, k)
+    np.testing.assert_array_equal(ids_s, ids_o)
+    np.testing.assert_array_equal(sims_s, sims_o)
+
+
+@pytest.mark.parametrize("mode", ["process", "thread"])
+def test_shard_parallel_matches_sequential(mode):
+    """Shared-bound parallel probing == sequential chain == linear scan,
+    uneven N, both worker modes."""
+    p, n, B, k, S = 64, 997, 16, 10, 8
+    db_bits = synthetic_binary_codes(n, p, seed=7)
+    qs = pack_bits(synthetic_queries(db_bits, B, seed=8))
+    db = pack_bits(db_bits)
+    e_seq = make_engine("sharded_amih", db, p, num_shards=S)
+    e_par = _force_pool(make_engine(
+        "sharded_amih", db, p, num_shards=S, probe_workers=S,
+        probe_mode=mode,
+    ))
+    assert e_par._use_parallel(B)
+    ids_s, sims_s, st_s = e_seq.knn_batch(qs, k)
+    ids_p, sims_p, st_p = e_par.knn_batch(qs, k)
+    np.testing.assert_array_equal(ids_s, ids_p)
+    np.testing.assert_array_equal(sims_s, sims_p)
+    _check_exact(ids_p, sims_p, qs, db, k)
+    assert st_p.shards == S and len(st_p.per_shard) == S
+    # per_shard rows cover the DB in shard-id order either way
+    assert [d["shard"] for d in st_p.per_shard] == list(range(S))
+    assert sum(d["rows"] for d in st_p.per_shard) == n
+    # verify-launch deltas travel back from the workers (a forked
+    # child's index counters never reach the parent's objects)
+    assert sum(d["launches"] for d in st_p.per_shard) > 0
+
+
+def test_shard_parallel_k_exceeds_shard_rows():
+    p, n, k, S = 64, 50, 40, 8                 # ~6 rows/shard, k=40
+    db_bits = synthetic_binary_codes(n, p, seed=9)
+    qs = pack_bits(synthetic_queries(db_bits, 4, seed=10))
+    db = pack_bits(db_bits)
+    eng = _force_pool(make_engine(
+        "sharded_amih", db, p, num_shards=S, probe_workers=S
+    ))
+    ids, sims, _ = eng.knn_batch(qs, k)
+    _check_exact(ids, sims, qs, db, k)
+    ids, sims, _ = eng.knn_batch(qs, 99)       # k > n clamps too
+    _check_exact(ids, sims, qs, db, n)
+
+
+def test_parallel_floor_falls_back_to_sequential():
+    """Adaptive stand-down: tiny shards, narrow batches, or a host
+    without real cores run the sequential chain instead of the pool."""
+    p, n = 64, 120
+    db_bits = synthetic_binary_codes(n, p, seed=11)
+    db = pack_bits(db_bits)
+    eng = make_engine("sharded_amih", db, p, num_shards=4, probe_workers=4)
+    assert not eng._use_parallel(32)       # 30 rows/shard < row floor
+    _force_pool(eng)
+    assert eng._use_parallel(32) and eng._use_parallel(1)
+    eng.PARALLEL_MIN_BATCH = 8
+    assert not eng._use_parallel(1)        # narrow batch: fork unamortized
+    eng.PARALLEL_MIN_BATCH = 0
+    eng.PARALLEL_MIN_CPUS = 10**6
+    assert not eng._use_parallel(32)       # no real cores: pool loses
+
+
+def test_shared_bound_never_worse_than_exact_kth():
+    """Determinism/exactness of the shared bound: across many batches the
+    k-th sim the parallel engine returns equals the exact k-th cosine
+    (never below it — the monotone bound may only prune, not lose)."""
+    p, n, k, S = 64, 1201, 7, 8
+    db_bits = synthetic_binary_codes(n, p, seed=12)
+    db = pack_bits(db_bits)
+    eng = _force_pool(make_engine(
+        "sharded_amih", db, p, num_shards=S, probe_workers=S
+    ))
+    for seed in range(3):
+        qs = pack_bits(synthetic_queries(db_bits, 8, seed=20 + seed))
+        _, sims, _ = eng.knn_batch(qs, k)
+        for i in range(8):
+            exact = np.sort(sims_against_db(qs[i], db))[::-1]
+            assert sims[i, -1] == exact[k - 1]
+
+
+def test_shared_bound_monotone_and_dedups():
+    sb = SharedBound(2, 3)
+    assert np.all(np.isinf(sb.bounds)) and np.all(sb.bounds < 0)
+    ids = np.array([5, 9, 11], dtype=np.int64)
+    sims = np.array([0.9, 0.8, 0.7])
+    sb.offer(0, ids, sims)
+    assert sb.bounds[0] == pytest.approx(0.7)
+    # re-offering the same ids must NOT inflate the k-th
+    sb.offer(0, ids, sims)
+    assert sb.bounds[0] == pytest.approx(0.7)
+    # better candidates raise it; worse ones never lower it
+    sb.offer(0, np.array([2], dtype=np.int64), np.array([0.95]))
+    assert sb.bounds[0] == pytest.approx(0.8)
+    sb.offer(0, np.array([3], dtype=np.int64), np.array([0.1]))
+    assert sb.bounds[0] == pytest.approx(0.8)
+    assert np.isinf(sb.bounds[1]) and sb.bounds[1] < 0
+    assert prime_ids(100, 3).size <= 100
+
+
+def test_live_bound_reads_per_tuple_step():
+    """knn_batch_bounded reads the bound array live (no defensive copy):
+    raising it mid-search prunes the remaining tuple walk."""
+    from repro.core import AMIHIndex, AMIHStats
+
+    p, n, k = 64, 600, 5
+    db_bits = synthetic_binary_codes(n, p, seed=13)
+    db = pack_bits(db_bits)
+    q = pack_bits(synthetic_queries(db_bits, 1, seed=14))
+    index = AMIHIndex.build(db, p)
+    free = [AMIHStats()]
+    index.knn_batch_bounded(q, k, stop_below=np.array([-np.inf]),
+                            stats=free)
+    bounds = np.array([-np.inf])
+    seen = []
+
+    def on_done(qi, ids, sims):
+        seen.append((qi, ids.copy(), sims.copy()))
+        bounds[qi] = np.inf     # slam the live bound shut after k fills
+
+    st = [AMIHStats()]
+    res = index.knn_batch_bounded(
+        q, k, stop_below=bounds, stats=st, on_done=on_done
+    )
+    assert seen and seen[0][0] == 0 and seen[0][2].size == k
+    # the slammed bound stopped the walk no later than the free run
+    assert st[0].tuples_processed <= free[0].tuples_processed
+    np.testing.assert_array_equal(
+        res[0][1], np.sort(sims_against_db(q[0], db))[::-1][:k]
+    )
+
+
+# --------------------------------------------------------- StagedExecutor
+def test_staged_executor_orders_and_overlaps():
+    order = []
+
+    def slow_a(x):
+        time.sleep(0.01)
+        order.append(("a", x))
+        return x + 1
+
+    def slow_b(x):
+        time.sleep(0.01)
+        order.append(("b", x))
+        return x * 2
+
+    with StagedExecutor([Stage("a", slow_a), Stage("b", slow_b)]) as ex:
+        out = list(ex.map(range(6)))
+    assert out == [(i + 1) * 2 for i in range(6)]
+    # overlap happened: some stage-a work ran before earlier items
+    # finished stage b (strict sequential order would interleave a,b,a,b)
+    a_positions = [i for i, (s, _) in enumerate(order) if s == "a"]
+    assert a_positions[2] < len(order) - 2
+
+
+def test_staged_executor_propagates_errors_in_order():
+    def boom(x):
+        if x == 2:
+            raise ValueError("stage failed on 2")
+        return x
+
+    with StagedExecutor([Stage("id", boom), Stage("id2", lambda x: x)]) as ex:
+        it = ex.map(range(4))
+        assert next(it) == 0
+        assert next(it) == 1
+        with pytest.raises(ValueError, match="stage failed on 2"):
+            list(it)
+
+    with pytest.raises(ValueError, match="at least one stage"):
+        StagedExecutor([])
+
+
+def test_stream_search_latency_counters_and_queue_depth():
+    p, n, k = 64, 300, 4
+    db_bits = synthetic_binary_codes(n, p, seed=15)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, 12, seed=16))
+    eng = make_engine("amih", db, p)
+    steps = list(stream_search(eng, [qs[:4], qs[4:8], qs[8:]], k))
+    assert [sr.step for sr in steps] == [0, 1, 2]
+    assert [sr.stats.queue_depth for sr in steps] == [8, 4, 0]
+    for sr in steps:
+        assert sr.latency_ms > 0
+        assert {"p50", "p99", "mean", "count"} <= set(sr.stats.latency_ms)
+    assert steps[-1].stats.latency_ms["count"] == 12
+
+
+# ------------------------------------------------------------ ticket API
+def test_ticket_is_int_compatible():
+    t = Ticket(7)
+    assert int(t) == 7 and t == 7 and hash(t) == hash(7)
+    d = {7: "x"}
+    assert d[t] == "x"
+    assert t != Ticket(8)
+    t.future.set_result(("ids", "sims"))
+    assert t.result(timeout=1) == ("ids", "sims")
+    assert "done" in repr(t)

@@ -200,6 +200,31 @@ def test_plan_knob_passes_through_make_engine():
         make_engine("sharded_scan", db, p, plan=ShardPlan.balanced(n + 1, 3))
 
 
+# ------------------------------------------------- deprecated shim
+def test_core_distributed_shim_warns_and_reexports():
+    """core.distributed is a DeprecationWarning shim now; its re-exports
+    must keep resolving for old imports."""
+    import importlib
+    import warnings
+
+    import repro.core.distributed as legacy
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy = importlib.reload(legacy)
+    assert any(
+        issubclass(w.category, DeprecationWarning)
+        and "repro.shard" in str(w.message)
+        for w in caught
+    )
+    from repro.shard import ShardPlan as new_plan
+
+    assert legacy.ShardPlan is new_plan
+    for name in ("make_retrieval_step", "sharded_scan_candidates",
+                 "sharded_scan_topk"):
+        assert callable(getattr(legacy, name))
+
+
 # ------------------------------------------------- annotation regression
 def test_distributed_annotations_resolve():
     """Regression: ``shard_axes: Optional[...]`` used to reference an

@@ -269,6 +269,142 @@ def test_retrieval_service_exact_and_sublinear(rng):
         assert sims[0] == pytest.approx(1.0)
 
 
+def test_retrieval_service_streaming_and_thread_safe_submit(rng):
+    """submit is thread-safe (concurrent submitters, unique qids, no
+    lost queries); run_queued(stream=True) yields per-step results as
+    they complete, resolves every ticket's future, and stamps
+    queue-depth + p50/p99 latency counters on each step's stats."""
+    import threading
+
+    cfg = get_tiny("gemma_2b").replace(compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    svc = RetrievalService(
+        cfg, params,
+        RetrievalConfig(code_bits=32, aqbc_iters=5, m_tables=4,
+                        search_batch_size=4),
+    )
+    docs = rng.integers(1, cfg.vocab_size, (60, 24)).astype(np.int32)
+    svc.build_index(docs)
+
+    tickets, t_lock = [], threading.Lock()
+
+    def submitter(lo):
+        for qi in range(lo, lo + 5):
+            t = svc.submit(docs[qi])
+            with t_lock:
+                tickets.append(t)
+
+    threads = [threading.Thread(target=submitter, args=(lo,))
+               for lo in (0, 5, 10)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert svc.queue_depth() == 15
+    assert sorted(int(t) for t in tickets) == list(range(15))
+
+    steps = list(svc.run_queued(k=3, stream=True))
+    assert svc.queue_depth() == 0
+    assert [s.step for s in steps] == [0, 1, 2, 3]          # 15 / 4 -> 4
+    assert [s.stats.queue_depth for s in steps] == [11, 7, 3, 0]
+    for s in steps:
+        assert {"p50", "p99"} <= set(s.stats.latency_ms)
+    # every ticket resolved, results match the direct batched search
+    for t in tickets:
+        ids, sims = t.result(timeout=5)
+        qi = int(t)   # submission order == docs order per thread slice
+        assert ids.shape == (3,) and sims.shape == (3,)
+    # the non-streaming API still returns the qid-keyed dict and accepts
+    # tickets as keys
+    t2 = svc.submit(docs[0])
+    out = svc.run_queued(k=3)
+    assert set(out) == {int(t2)}
+    ids_d, sims_d = out[t2]
+    ids_b, sims_b, _ = svc.search_batch(docs[0][None, :], k=3)
+    np.testing.assert_array_equal(ids_d, ids_b[0])
+    np.testing.assert_array_equal(sims_d, sims_b[0])
+
+
+def test_retrieval_service_failed_drain_fails_tickets_and_requeues(rng):
+    """A drain that raises mid-stream re-queues the unanswered queries
+    AND fails their tickets' current futures (waiters must observe the
+    dead drain, not hang); a successful retry resolves the replacement
+    futures."""
+    cfg = get_tiny("gemma_2b").replace(compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    svc = RetrievalService(
+        cfg, params,
+        RetrievalConfig(code_bits=32, aqbc_iters=5, m_tables=4,
+                        search_batch_size=2),
+    )
+    docs = rng.integers(1, cfg.vocab_size, (40, 24)).astype(np.int32)
+    svc.build_index(docs)
+    tickets = [svc.submit(docs[qi]) for qi in range(4)]
+
+    real_knn = svc.engine.knn_batch
+    calls = {"n": 0}
+
+    def flaky(q, k):
+        calls["n"] += 1
+        if calls["n"] == 2:            # second batch step dies
+            raise RuntimeError("device fell over")
+        return real_knn(q, k)
+
+    svc.engine.knn_batch = flaky
+    # a waiter holding the PRE-failure future (e.g. blocked in result())
+    # must observe the dead drain, not hang
+    pre_futures = [t.future for t in tickets]
+    with pytest.raises(RuntimeError, match="device fell over"):
+        for _ in svc.run_queued(k=3, stream=True):
+            pass
+    # step 0 answered; step 1's queries re-queued with FAILED futures
+    # (replaced by fresh ones that the retry drain resolves)
+    assert pre_futures[0].done() and pre_futures[1].done()
+    assert svc.queue_depth() == 2
+    for f in pre_futures[2:]:
+        with pytest.raises(RuntimeError, match="device fell over"):
+            f.result(timeout=1)
+    # retry drain answers the re-queued queries via replacement futures
+    svc.engine.knn_batch = real_knn
+    out = svc.run_queued(k=3)
+    assert set(out) == {2, 3}
+    for t in tickets[2:]:
+        ids, sims = t.result(timeout=5)
+        assert ids.shape == (3,)
+
+    # abandoning the stream early is NOT a failure: queries re-queue
+    # with their futures left pending and the next drain resolves them
+    t5, t6, t7 = (svc.submit(docs[qi]) for qi in (5, 6, 7))
+    for step in svc.run_queued(k=3, stream=True):
+        break                              # consumer walks away
+    assert svc.queue_depth() == 1          # step 0 answered t5+t6 only
+    assert t5.future.done() and not t7.future.done()
+    svc.run_queued(k=3)
+    assert t7.result(timeout=5)[0].shape == (3,)
+
+
+def test_retrieval_service_pipelined_backend_exact(rng):
+    """RetrievalConfig(pipelined=True) turns on the engine-level overlap
+    and still answers exactly."""
+    cfg = get_tiny("gemma_2b").replace(compute_dtype="float32")
+    model = Model(cfg)
+    params = model.init_params(jax.random.key(0))
+    svc = RetrievalService(
+        cfg, params,
+        RetrievalConfig(code_bits=32, aqbc_iters=5, m_tables=4,
+                        pipelined=True),
+    )
+    docs = rng.integers(1, cfg.vocab_size, (80, 24)).astype(np.int32)
+    svc.build_index(docs)
+    assert svc.engine.overlap_verify
+    for qi in (3, 41):
+        ids, sims, _ = svc.search(docs[qi], k=5)
+        _, sims_l = svc.search_linear(docs[qi], k=5)
+        np.testing.assert_allclose(sims, sims_l, atol=1e-9)
+
+
 def test_retrieval_service_sharded_backend(rng):
     """RetrievalConfig.backend="sharded_amih" + num_shards threads the
     sharded subsystem through serving; results match the linear scan."""
