@@ -113,12 +113,17 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
     rows = []
 
     def emit(backend, p, n, K, batch, n_shards, t, totals, *,
-             m_tables=0, t_seed=None, t_scan=None, t_build=0.0):
+             m_tables=0, t_seed=None, t_scan=None, t_build=0.0,
+             devices=None):
         t_ref = t_scan if t_scan is not None else t
         rows.append({
             "backend": backend, "p": p, "n": n, "K": K,
             "batch": batch, "shards": n_shards, "queries": nq,
             "m_tables": m_tables,
+            # distinct placement devices the shards landed on (sharded
+            # backends; 1 on a single-device host). bench_check excludes
+            # a cell from the gate when this changed between runs.
+            "devices": devices,
             "total_s": round(t, 6),
             "ms_per_query": round(1e3 * t / nq, 4),
             "qps": round(nq / max(t, 1e-9), 2),
@@ -173,13 +178,14 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                     continue
                 sh_scan = make_engine("sharded_scan", db, p, num_shards=S)
                 sh_amih = make_engine("sharded_amih", db, p, num_shards=S)
+                n_dev = len({str(d) for d in sh_amih.plan.devices}) or 1
                 for K in ks:
                     t_s, tot_s = _time_batched(sh_scan, qs, K, max(batches))
                     emit("sharded_scan", p, n, K, max(batches), S, t_s,
-                         tot_s)
+                         tot_s, devices=n_dev)
                     t_a, tot_a = _time_batched(sh_amih, qs, K, max(batches))
                     r = emit("sharded_amih", p, n, K, max(batches), S, t_a,
-                             tot_a)
+                             tot_a, devices=n_dev)
                     print(
                         f"p={p} n={n:>9} K={K:>3} S={S:>2} "
                         f"sharded_amih={r['ms_per_query']:.3f}ms/q "

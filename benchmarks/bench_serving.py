@@ -10,11 +10,15 @@ drain. Cells come in pairs:
     (``overlap_verify=True``: tuple-step verify/probe overlap).
   - shards=S: engine "sharded_amih", sequential (PR 3's chained bound)
     vs pipelined (``probe_workers=S``: shard-parallel probing under the
-    shared warm-started k-th-cosine bound). The pool's adaptive
-    stand-down gates apply (ShardedAMIHEngine.PARALLEL_MIN_*): on hosts
-    without real cores, narrow batches, or tiny shards the pipelined
-    engine runs the sequential chain — ``parallel_active`` on each row
-    records whether the pool actually engaged, so a ~1.0x speedup with
+    shared warm-started k-th-cosine bound, served by the PERSISTENT
+    worker pool — forked once per engine, reused by every drain/repeat
+    of the cell; ``pool``/``pool_forks`` on each row record that, and
+    ``devices`` records how many distinct placement devices the shards
+    landed on). The pool's adaptive stand-down gates apply
+    (ShardedAMIHEngine.PARALLEL_MIN_*): on hosts without real cores,
+    narrow batches, or tiny shards the pipelined engine runs the
+    sequential chain — ``parallel_active`` on each row records whether
+    the pool actually engaged, so a ~1.0x speedup with
     ``parallel_active: false`` reads as "host can't pay for the pool",
     not as a pipelining regression.
 
@@ -102,6 +106,11 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                 seq_ms = {}
                 for mode in ("sequential", "pipelined"):
                     engine = _engine_for(mode, db, p, S)
+                    plan = getattr(engine, "plan", None)
+                    n_dev = (
+                        len({str(d) for d in plan.devices})
+                        if plan is not None and plan.devices else 1
+                    )
                     for batch in batches:
                         best_t, best_lats = float("inf"), []
                         for _ in range(REPEATS):
@@ -114,11 +123,22 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                                 S == 1 or engine._use_parallel(batch)
                             )
                         )
+                        # persistent-pool accounting: the drain above
+                        # reused one fork-once worker pool across every
+                        # repeat (when the stand-down gates let it engage)
+                        pool = getattr(engine, "_pool", None)
                         row = {
                             "backend": "amih" if S == 1 else "sharded_amih",
                             "mode": mode, "p": p, "n": n, "K": k,
                             "batch": batch, "shards": S, "queries": nq,
                             "parallel_active": active,
+                            "devices": n_dev,
+                            "pool": (
+                                "persistent" if pool is not None else ""
+                            ),
+                            "pool_forks": (
+                                pool.forks if pool is not None else 0
+                            ),
                             "total_s": round(best_t, 6),
                             "ms_per_query": round(ms_q, 4),
                             "qps": round(nq / max(best_t, 1e-9), 2),
@@ -145,6 +165,8 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                             f"{ms_q:7.3f} ms/q  p50={row['p50_ms']:.2f} "
                             f"p99={row['p99_ms']:.2f}{extra}"
                         )
+                    if hasattr(engine, "close"):
+                        engine.close()   # release the persistent pool
     path = write_csv(csv_name, rows)
     section = {
         "workload": {

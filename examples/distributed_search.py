@@ -6,7 +6,9 @@ This is the >HBM-capacity regime of the paper's SIFT-1B experiment — the
 layer AMIH hands off to when one host's index cannot hold the corpus.
 
 Run:  PYTHONPATH=src python examples/distributed_search.py
-(sets the fake-device flag itself; run as a script, not an import)
+(sets the fake-device flag itself; run as a script, not an import.
+REPRO_EXAMPLE_N overrides the DB size — the examples smoke test runs
+this headless on a small n)
 """
 
 import os
@@ -27,7 +29,7 @@ from repro.launch.mesh import make_mesh
 
 def main():
     print(f"devices: {len(jax.devices())}")
-    p, n, B, k = 128, 1 << 18, 8, 10
+    p, n, B, k = 128, int(os.environ.get("REPRO_EXAMPLE_N", 1 << 18)), 8, 10
     db_bits = synthetic_binary_codes(n, p, seed=0)
     q_bits = synthetic_queries(db_bits, B, seed=1)
     db = jnp.asarray(pack_bits(db_bits))

@@ -22,8 +22,11 @@ Compute knobs (PR 2):
     results stay bit-identical to the numpy path.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+(REPRO_EXAMPLE_N overrides the DB size — the examples smoke test runs
+this headless on a small n)
 """
 
+import os
 import time
 
 import numpy as np
@@ -33,7 +36,7 @@ from repro.data import synthetic_binary_codes, synthetic_queries
 
 
 def main():
-    p, n, k, B = 64, 200_000, 10, 5
+    p, n, k, B = 64, int(os.environ.get("REPRO_EXAMPLE_N", 200_000)), 10, 5
     print(f"dataset: n={n:,} codes x {p} bits, {B} queries in one batch")
     db_bits = synthetic_binary_codes(n, p, seed=0)
     db = pack_bits(db_bits)

@@ -9,8 +9,13 @@ cell-by-cell: for every amih / sharded_amih / sharded_scan
 fresh throughput regressed by more than ``--threshold`` (default 25% on
 ms_per_query). When the committed baseline carries a ``"serving"``
 section (benchmarks/bench_serving.py: pipelined vs sequential serving
-cells with p50/p99 latency), those cells are gated the same way; older
-baselines without the section still parse and skip that gate. Host timing is noisy, so single-cell blips on a
+cells with p50/p99 latency, persistent-pool and placement fields),
+those cells are gated the same way; older baselines without the section
+still parse and skip that gate. Cells whose recorded execution config
+(placement-device count, probe-pool flavor) differs between baseline
+and fresh run are excluded with a note instead of gated —
+apples-to-oranges timing is worse than no gate — and baselines written
+before those fields existed compare against anything. Host timing is noisy, so single-cell blips on a
 loaded machine are possible — the gate is opt-in (wired into
 scripts/verify.sh behind REPRO_BENCH_CHECK=1), not part of tier-1.
 
@@ -40,9 +45,12 @@ _GATED_BACKENDS = ("amih", "sharded_amih", "sharded_scan")
 
 
 def _cells(payload, batches, max_n, shards):
-    """(backend, p, n, K, batch, shards) -> ms_per_query for every gated
-    cell. Sharded rows ride the max batch size regardless of --batch;
-    pre-shard baselines carry shards=1 implicitly."""
+    """(backend, p, n, K, batch, shards) -> (ms_per_query, config) for
+    every gated cell. Sharded rows ride the max batch size regardless of
+    --batch; pre-shard baselines carry shards=1 implicitly. ``config``
+    is the cell's placement fingerprint (distinct devices the shards
+    landed on) — rows written before placement existed carry None and
+    compare against anything."""
     out = {}
     for row in payload["rows"]:
         if row["backend"] not in _GATED_BACKENDS:
@@ -56,21 +64,42 @@ def _cells(payload, batches, max_n, shards):
             continue
         key = (row["backend"], row["p"], row["n"], row["K"],
                row["batch"], n_shards)
-        out[key] = float(row["ms_per_query"])
+        out[key] = (float(row["ms_per_query"]), row.get("devices"))
     return out
 
 
 def _serving_cells(section, max_n):
-    """(backend, mode, p, n, K, batch, shards) -> ms_per_query for the
-    serving-bench cells (see benchmarks/bench_serving.py)."""
+    """(backend, mode, p, n, K, batch, shards) -> (ms_per_query, config)
+    for the serving-bench cells (see benchmarks/bench_serving.py).
+    ``config`` fingerprints the cell's execution shape — probe-pool
+    flavor and placement-device count — so a persistent-pool cell is
+    never gated against a per-call-fork or differently-placed baseline;
+    pre-pool baselines carry None and compare against anything."""
     out = {}
     for row in section.get("rows", []):
         if row["n"] > max_n:
             continue
         key = (row["backend"], row["mode"], row["p"], row["n"],
                row["K"], row["batch"], row["shards"])
-        out[key] = float(row["ms_per_query"])
+        cfg = (
+            (row.get("pool", ""), row.get("devices"))
+            if ("pool" in row or "devices" in row) else None
+        )
+        out[key] = (float(row["ms_per_query"]), cfg)
     return out
+
+
+def _comparable(base_cells, fresh_cells):
+    """Cells present in both runs whose configs agree (a None config —
+    an older baseline without the fields — matches anything). Returns
+    (sorted comparable keys, keys skipped for config drift)."""
+    shared = set(base_cells) & set(fresh_cells)
+    skipped = {
+        c for c in shared
+        if base_cells[c][1] is not None and fresh_cells[c][1] is not None
+        and base_cells[c][1] != fresh_cells[c][1]
+    }
+    return sorted(shared - skipped), sorted(skipped)
 
 
 def check_serving(baseline, max_n, threshold) -> int:
@@ -107,14 +136,21 @@ def check_serving(baseline, max_n, threshold) -> int:
 
     base_cells = _serving_cells(section, serving_max_n)
     fresh_cells = fresh(wl["ps"], wl["sizes"], wl["batches"], wl["shards"])
-    shared = sorted(set(base_cells) & set(fresh_cells))
+    shared, skipped = _comparable(base_cells, fresh_cells)
+    for cell in skipped:
+        print(f"bench_check: serving cell {cell} skipped — pool/placement "
+              f"config changed ({base_cells[cell][1]} -> "
+              f"{fresh_cells[cell][1]}); re-run bench_serving to "
+              f"re-baseline it")
     if not shared:
         print("bench_check: no comparable serving cells")
         return 2
+    base_ms = {c: base_cells[c][0] for c in shared}
+    fresh_ms = {c: fresh_cells[c][0] for c in shared}
 
     def regressed():
         return [c for c in shared
-                if fresh_cells[c] / max(base_cells[c], 1e-9)
+                if fresh_ms[c] / max(base_ms[c], 1e-9)
                 > 1.0 + threshold]
 
     failures = regressed()
@@ -127,18 +163,18 @@ def check_serving(baseline, max_n, threshold) -> int:
             {c[2] for c in failures}, {c[3] for c in failures},
             {c[5] for c in failures}, {c[6] for c in failures},
         )
-        for cell, ms in retry.items():
-            if cell in fresh_cells:
-                fresh_cells[cell] = min(fresh_cells[cell], ms)
+        for cell, (ms, _) in retry.items():
+            if cell in fresh_ms:
+                fresh_ms[cell] = min(fresh_ms[cell], ms)
         failures = regressed()
     for cell in shared:
         backend, mode, p, n, K, batch, n_shards = cell
-        ratio = fresh_cells[cell] / max(base_cells[cell], 1e-9)
+        ratio = fresh_ms[cell] / max(base_ms[cell], 1e-9)
         status = "FAIL" if cell in failures else "ok"
         print(f"  [{status}] {backend:>13}/{mode:<10} p={p} n={n:>9} "
               f"K={K:>3} B={batch:>3} S={n_shards:>2} "
-              f"baseline={base_cells[cell]:.3f} "
-              f"fresh={fresh_cells[cell]:.3f} ms/q ({ratio:.2f}x)")
+              f"baseline={base_ms[cell]:.3f} "
+              f"fresh={fresh_ms[cell]:.3f} ms/q ({ratio:.2f}x)")
     if failures:
         print(f"bench_check: {len(failures)}/{len(shared)} serving cells "
               f"regressed beyond {threshold:.0%}")
@@ -207,16 +243,22 @@ def main(argv=None) -> int:
 
     base_cells = _cells(baseline, set(args.batch), max_n, shards)
     fresh_cells = fresh_sweep(wl["ps"], wl["ks"], max_n)
-    shared = sorted(set(base_cells) & set(fresh_cells))
+    shared, skipped = _comparable(base_cells, fresh_cells)
+    for cell in skipped:
+        print(f"bench_check: cell {cell} skipped — placement config "
+              f"changed ({base_cells[cell][1]} -> {fresh_cells[cell][1]}); "
+              f"re-run the bench to re-baseline it")
     if not shared:
         print("bench_check: no comparable AMIH cells between baseline and "
               "fresh run (workloads disjoint?)")
         return 2
+    base_ms = {c: base_cells[c][0] for c in shared}
+    fresh_ms = {c: fresh_cells[c][0] for c in shared}
 
     def regressed(cells):
         return [
             c for c in cells
-            if fresh_cells[c] / max(base_cells[c], 1e-9)
+            if fresh_ms[c] / max(base_ms[c], 1e-9)
             > 1.0 + args.threshold
         ]
 
@@ -233,20 +275,19 @@ def main(argv=None) -> int:
             max(c[2] for c in failures),
             sizes=sorted({c[2] for c in failures}),
         )
-        for cell, ms in retry.items():
-            if cell in fresh_cells:
-                fresh_cells[cell] = min(fresh_cells[cell], ms)
+        for cell, (ms, _) in retry.items():
+            if cell in fresh_ms:
+                fresh_ms[cell] = min(fresh_ms[cell], ms)
         failures = regressed(shared)
 
     for cell in shared:
-        base_ms, fresh_ms = base_cells[cell], fresh_cells[cell]
-        ratio = fresh_ms / max(base_ms, 1e-9)
+        ratio = fresh_ms[cell] / max(base_ms[cell], 1e-9)
         status = "FAIL" if cell in failures else "ok"
         backend, p, n, K, batch, n_shards = cell
         print(f"  [{status}] {backend:>13} p={p} n={n:>9} K={K:>3} "
               f"B={batch:>3} S={n_shards:>2} "
-              f"baseline={base_ms:.3f} fresh={fresh_ms:.3f} ms/q "
-              f"({ratio:.2f}x)")
+              f"baseline={base_ms[cell]:.3f} fresh={fresh_ms[cell]:.3f} "
+              f"ms/q ({ratio:.2f}x)")
     if failures:
         print(f"bench_check: {len(failures)}/{len(shared)} engine cells "
               f"regressed beyond {args.threshold:.0%}")

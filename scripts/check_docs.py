@@ -1,0 +1,197 @@
+#!/usr/bin/env python
+"""Docs-rot gate: every repo path and code identifier cited in the docs
+must actually exist.
+
+Scans README.md, ROADMAP.md, and docs/*.md for three kinds of
+references and fails if any is dangling:
+
+  1. repo paths — tokens like ``src/repro/shard/plan.py`` or
+     ``benchmarks/bench_serving.py`` (any ``src/ scripts/ benchmarks/
+     examples/ tests/ docs/`` prefix) must exist on disk;
+  2. dotted ``repro.*`` identifiers in backticks — e.g.
+     ``repro.core.engine.make_engine`` — must import/resolve;
+  3. backticked ``ClassName.attr`` chains — e.g.
+     ``AMIHIndex.knn_batch_bounded`` — must resolve against the public
+     namespace of the core modules (dataclass fields count).
+
+Wired into scripts/verify.sh so refactors that move or rename anything
+the docs point at fail tier-1 verification until the docs follow.
+
+Usage:  PYTHONPATH=src python scripts/check_docs.py [-v]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import os
+import re
+import sys
+import warnings
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+# files under the gate (CHANGES.md is an append-only log, PAPER*/SNIPPETS
+# are retrieval artifacts — neither is a promise about the current tree)
+DOC_FILES = ("README.md", "ROADMAP.md")
+DOCS_DIR = "docs"
+
+_PATH_RE = re.compile(
+    r"(?<![\w/.])((?:src|scripts|benchmarks|examples|tests|docs)/"
+    r"[A-Za-z0-9_./\-]+)"
+)
+_BACKTICK_RE = re.compile(r"`([^`\n]+)`")
+_REPRO_RE = re.compile(r"^repro(?:\.[A-Za-z_][A-Za-z0-9_]*)+$")
+_CLASS_ATTR_RE = re.compile(
+    r"^_?[A-Z][A-Za-z0-9_]*(?:\.[A-Za-z_][A-Za-z0-9_]*)+$"
+)
+
+# modules whose public names make up the ClassName.attr namespace
+_NAMESPACE_MODULES = (
+    "repro.core",
+    "repro.core.amih",
+    "repro.core.engine",
+    "repro.shard",
+    "repro.shard.plan",
+    "repro.pipeline",
+    "repro.pipeline.shardpool",
+    "repro.kernels.ops",
+    "repro.serve.retrieval",
+)
+
+
+def _doc_paths():
+    out = [os.path.join(_ROOT, f) for f in DOC_FILES]
+    docs = os.path.join(_ROOT, DOCS_DIR)
+    if os.path.isdir(docs):
+        out.extend(
+            os.path.join(docs, f)
+            for f in sorted(os.listdir(docs))
+            if f.endswith(".md")
+        )
+    return out
+
+
+def _namespace():
+    ns = {}
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        for modname in _NAMESPACE_MODULES:
+            mod = importlib.import_module(modname)
+            for name, obj in vars(mod).items():
+                ns.setdefault(name, obj)
+    return ns
+
+
+def _has_attr(obj, attr: str) -> bool:
+    if hasattr(obj, attr):
+        return True
+    # dataclass fields with default_factory never become class attributes
+    if dataclasses.is_dataclass(obj):
+        return attr in {f.name for f in dataclasses.fields(obj)}
+    return False
+
+
+def _resolve_repro(token: str) -> bool:
+    parts = token.split(".")
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")   # core.distributed shim etc.
+        for i in range(len(parts), 0, -1):
+            try:
+                obj = importlib.import_module(".".join(parts[:i]))
+            except ImportError:
+                continue
+            for j, attr in enumerate(parts[i:]):
+                last = i + j == len(parts) - 1
+                if last and _has_attr(obj, attr):
+                    return True
+                try:
+                    obj = getattr(obj, attr)
+                except AttributeError:
+                    return False
+            return True
+    return False
+
+
+def _check_file(path: str, ns, verbose: bool):
+    failures, checked = [], 0
+    rel = os.path.relpath(path, _ROOT)
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            for m in _PATH_RE.finditer(line):
+                token = m.group(1).rstrip(".,:;")
+                checked += 1
+                if not os.path.exists(os.path.join(_ROOT, token)):
+                    failures.append(
+                        f"{rel}:{lineno}: missing path {token!r}"
+                    )
+                elif verbose:
+                    print(f"  ok path       {token}")
+            for m in _BACKTICK_RE.finditer(line):
+                token = m.group(1).strip()
+                if token.endswith("()"):
+                    token = token[:-2]
+                if _REPRO_RE.match(token):
+                    checked += 1
+                    if not _resolve_repro(token):
+                        failures.append(
+                            f"{rel}:{lineno}: unresolvable identifier "
+                            f"{token!r}"
+                        )
+                    elif verbose:
+                        print(f"  ok identifier {token}")
+                elif _CLASS_ATTR_RE.match(token):
+                    head, *tail = token.split(".")
+                    obj = ns.get(head)
+                    if obj is None:
+                        continue   # not one of ours (e.g. numpy classes)
+                    checked += 1
+                    ok = True
+                    for j, attr in enumerate(tail):
+                        if j == len(tail) - 1 and _has_attr(obj, attr):
+                            break
+                        try:
+                            obj = getattr(obj, attr)
+                        except AttributeError:
+                            ok = False
+                            break
+                    if not ok:
+                        failures.append(
+                            f"{rel}:{lineno}: {head!r} has no "
+                            f"{'.'.join(tail)!r} ({token})"
+                        )
+                    elif verbose:
+                        print(f"  ok attr       {token}")
+    return failures, checked
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every reference checked")
+    args = ap.parse_args(argv)
+
+    ns = _namespace()
+    failures, checked = [], 0
+    for path in _doc_paths():
+        if args.verbose:
+            print(os.path.relpath(path, _ROOT))
+        f, c = _check_file(path, ns, args.verbose)
+        failures.extend(f)
+        checked += c
+    for f in failures:
+        print(f"check_docs: {f}")
+    if failures:
+        print(f"check_docs: {len(failures)} dangling reference(s) out of "
+              f"{checked} checked")
+        return 1
+    print(f"check_docs: {checked} doc references OK "
+          f"({len(_doc_paths())} files)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

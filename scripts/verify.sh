@@ -12,6 +12,9 @@ python -m pytest -x -q "$@"
 # overlap, shard-parallel probing, streaming loop) answers bit-identical
 # to its sequential counterpart on a small workload (~10 s).
 python -m repro.pipeline.smoke
+# Docs-rot gate: every repo path / repro.* identifier cited in
+# README/docs/ROADMAP must still exist (see scripts/check_docs.py).
+python scripts/check_docs.py
 if [[ "${REPRO_BENCH_CHECK:-0}" == "1" ]]; then
   python scripts/bench_check.py --max-n "${REPRO_BENCH_CHECK_MAX_N:-10000}"
 fi

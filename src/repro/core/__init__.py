@@ -10,8 +10,9 @@ Public surface:
   - linear_scan_knn                         (the paper's baseline)
   - aqbc                                    (binarization used in §6)
   - repro.shard                             (pod-scale sharded subsystem:
-    ShardPlan + "sharded_scan"/"sharded_amih" backends; core.distributed
-    re-exports its primitives for old imports)
+    ShardPlan + "sharded_scan"/"sharded_amih" backends with per-shard
+    device placement; ``core.distributed`` is only a deprecated
+    re-export shim over it, kept for old imports)
 
 The index classes remain importable for algorithm-level work; serving,
 benchmarks, and examples go through ``make_engine(backend, db_words, p)``

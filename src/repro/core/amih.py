@@ -158,6 +158,14 @@ class AMIHIndex:
     (local row + offset) from every public search method, so per-shard
     result lists merge without any caller-side remapping. Internal state
     (tables, dedup bitmaps, device gathers) stays local-row-indexed.
+
+    ``device`` places the index's device state: ``db_dev`` is committed
+    to it (``jax.device_put``) and every grouped-verify launch runs
+    there. ``None`` keeps the default device — the single-index engines'
+    behavior. The sharded AMIH engine assigns each shard's index its own
+    device from the ``ShardPlan`` so per-shard verification scales device
+    memory and verify bandwidth with the shard count instead of
+    funnelling every shard through device 0.
     """
 
     p: int
@@ -165,6 +173,8 @@ class AMIHIndex:
     db_words: np.ndarray = field(repr=False)   # (n, W) uint32 — for verification
     tables: List[_SubTable] = field(repr=False, default_factory=list)
     id_offset: int = 0
+    # Placement device for db_dev + grouped-verify launches (None: default).
+    device: Optional[object] = field(default=None, compare=False)
     # Candidate-verification backend: "numpy" (one vectorized host popcount
     # per z-group and tuple step) or "pallas" (one verify_tuples_grouped
     # launch per z-group and tuple step — native on TPU, interpret-mode
@@ -202,6 +212,7 @@ class AMIHIndex:
         m: Optional[int] = None,
         verify_backend: str = "numpy",
         id_offset: int = 0,
+        device: Optional[object] = None,
     ) -> "AMIHIndex":
         if verify_backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
@@ -229,6 +240,7 @@ class AMIHIndex:
         index = cls(
             p=p, m=m, db_words=db_words, tables=tables,
             verify_backend=verify_backend, id_offset=id_offset,
+            device=device,
         )
         if verify_backend == "pallas":
             index.db_dev  # upload once, at build time
@@ -240,11 +252,19 @@ class AMIHIndex:
 
     @property
     def db_dev(self):
-        """Device-resident (n, W) codes (uploaded on first access)."""
+        """Device-resident (n, W) codes (uploaded on first access).
+
+        With a placement ``device`` the upload COMMITS the array there
+        (``jax.device_put``), so every jitted computation consuming it —
+        the grouped verifies — compiles for and runs on that device."""
         if self._db_dev is None:
+            import jax
             import jax.numpy as jnp
 
-            self._db_dev = jnp.asarray(self.db_words)
+            if self.device is not None:
+                self._db_dev = jax.device_put(self.db_words, self.device)
+            else:
+                self._db_dev = jnp.asarray(self.db_words)
         return self._db_dev
 
     # ------------------------------------------------------------- search
@@ -769,6 +789,7 @@ class AMIHIndex:
                         np.array([seg.size], dtype=np.int32),
                         p=self.p,
                         use_pallas=True,
+                        device=self.device,
                     ).get()[0].astype(np.int64))
                 out[i] = np.concatenate(parts)
                 i += 1
@@ -800,6 +821,7 @@ class AMIHIndex:
                 lengths,
                 p=self.p,
                 use_pallas=True,
+                device=self.device,
             )
 
             def resolve_grouped(row=i, handle=handle, sizes=[b.size for b in sub_blocks]):

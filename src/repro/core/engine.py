@@ -74,9 +74,11 @@ class EngineStats:
 
     Sharded backends additionally fill ``shards`` and ``per_shard`` (one
     dict per shard: rows held, candidates contributed/verified, device
-    launches issued) — the serving-side view of where a batch's work
-    landed. ``cache_hits`` counts query rows answered from the engine's
-    hot-query cache without any probing (AMIHEngine's LRU).
+    launches issued, and ``"device"`` — the placement device the shard's
+    codes live on and its verification ran on) — the serving-side view
+    of where a batch's work landed. ``cache_hits`` counts query rows
+    answered from the engine's hot-query cache without any probing
+    (AMIHEngine's LRU).
 
     Streaming serving (repro.pipeline.stream) fills the queue-side
     counters: ``queue_depth`` is the number of queries still waiting
@@ -136,8 +138,24 @@ class SearchEngine(abc.ABC):
     def knn_batch(
         self, q_words: np.ndarray, k: int
     ) -> Tuple[np.ndarray, np.ndarray, EngineStats]:
-        """(B, W) packed queries -> (ids (B, k'), sims (B, k'), stats)
-        with k' = min(k, n). A 1-D (W,) query is treated as B=1."""
+        """Exact batched angular KNN: (B, W) packed queries ->
+        (ids (B, k'), sims (B, k'), stats) with k' = min(k, n). A 1-D
+        (W,) query is treated as B=1.
+
+        Contract every backend honors:
+
+          - ids are global DB row indices (int64); sims are the exact
+            float64 Eq. 3 cosines of those rows — bit-identical to
+            per-query ``linear_scan_knn`` up to ties inside one Hamming
+            tuple (codes of equal tuple are exactly equidistant; any
+            order among them is correct).
+          - rows are sorted by descending sim, ascending id within a
+            tie, and never contain duplicates.
+          - ``stats`` is an ``EngineStats`` with one per-query counter
+            object per row (AMIHStats / SearchStats); sharded backends
+            also fill the per-shard view (rows, candidates, launches,
+            placement device).
+        """
         ...
 
     # ------------------------------------------------------------ helpers
@@ -173,9 +191,37 @@ def make_engine(
 ) -> SearchEngine:
     """Build a search engine by backend name (see ``available_backends``).
 
-    The sharded backends ("sharded_scan" / "sharded_amih") live in
+    ``db_words`` is the packed (n, W) uint32 code array (``pack_bits``),
+    ``p`` the code length in bits. ``cfg`` is forwarded to the backend's
+    ``build``; unknown keys raise ``TypeError``. The registered backends
+    and their main knobs (full details in docs/tuning.md):
+
+      - "linear_scan"   — exhaustive baseline.
+                          ``compute_backend`` ("numpy" | "pallas"),
+                          ``chunk``.
+      - "single_table"  — one CSR table (paper §4, p <= 64).
+                          ``enumeration_cap``.
+      - "amih"          — angular multi-index hashing (paper §5).
+                          ``m``, ``verify_backend`` ("numpy" | "pallas"),
+                          ``enumeration_cap``, ``query_cache_size``,
+                          ``overlap_verify``.
+      - "sharded_scan"  — row-sharded exhaustive scan (repro.shard).
+                          ``mesh`` | ``num_shards`` | ``plan``,
+                          ``shard_axes``, ``devices``, ``chunk``.
+      - "sharded_amih"  — one shard-local AMIH index per slice, each
+                          placed on its own device.
+                          sharding knobs as above plus ``m``,
+                          ``verify_backend``, ``enumeration_cap``,
+                          ``probe_workers``, ``probe_mode``,
+                          ``prime_bound``.
+
+    Every backend answers the same batched ``knn_batch(q_words, k)`` and
+    returns results bit-identical to ``linear_scan_knn`` (up to ties
+    inside one Hamming tuple). The sharded backends live in
     ``repro.shard`` and are registered on first use, so numpy-only
-    callers of the host backends never pay the jax import.
+    callers of the host backends never pay the jax import. Engines that
+    hold workers ("amih" with ``overlap_verify``, "sharded_amih" with
+    ``probe_workers``) expose ``close()``; GC closes them too.
     """
     cls = ENGINES.get(backend)
     if cls is None and backend.startswith("sharded"):

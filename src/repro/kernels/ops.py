@@ -10,6 +10,7 @@ speed on CPU).
 from __future__ import annotations
 
 import functools
+import threading
 from typing import Tuple
 
 import jax
@@ -24,7 +25,9 @@ from .verify_tuples import verify_tuples_grouped as _verify_grouped_kernel
 
 __all__ = [
     "LAUNCH_COUNTS",
+    "LAUNCH_COUNTS_BY_DEVICE",
     "PendingKeys",
+    "device_key",
     "merge_topk",
     "on_tpu",
     "pad_bucket",
@@ -39,6 +42,24 @@ __all__ = [
 # AMIH's batched verification asserts exactly one grouped launch per
 # (z-group, tuple-step) through this counter (see tests/test_verify_grouped).
 LAUNCH_COUNTS = {"verify_grouped": 0, "verify": 0}
+
+# Per-device split of the grouped-verify launches: device key -> count.
+# The mesh-resident sharded AMIH path places each shard's verification on
+# that shard's assigned device; tests assert the placement actually
+# happened (not just that the arrays were tagged) through this counter.
+LAUNCH_COUNTS_BY_DEVICE: dict = {}
+
+# Guards the counter bumps: thread-mode shard probing (forced for the
+# pallas verify backend) dispatches launches from several threads, and
+# dict get+store is not atomic — an unguarded bump could drop counts the
+# placement tests assert on.
+_LAUNCH_LOCK = threading.Lock()
+
+
+def device_key(device) -> str:
+    """Stable string key for a placement device (``"default"`` for None —
+    the unplaced path that follows jax's default device)."""
+    return "default" if device is None else str(device)
 
 
 def on_tpu() -> bool:
@@ -276,10 +297,7 @@ def verify_tuples_op(
     return r10[:N], r01[:N]
 
 
-@functools.partial(
-    jax.jit, static_argnames=("p", "blk_c", "use_pallas", "interpret")
-)
-def _gather_verify_grouped(
+def _gather_verify_grouped_impl(
     q_words: jax.Array,
     db_words: jax.Array,
     cand_idx: jax.Array,
@@ -299,6 +317,38 @@ def _gather_verify_grouped(
             q_words, cand, lengths, p=p, blk_c=blk_c, interpret=interpret
         )
     return ref.verify_tuples_grouped_ref(q_words, cand, lengths, p)
+
+
+# Per-device jit instances of the gather+verify: one jitted callable (and
+# hence one O(log B * log C) executable cache) per placement device.
+# Sharded AMIH engines verify each shard on that shard's own device; a
+# single shared jit instance would interleave every device's executables
+# in one cache and make per-device trace/launch economy unobservable.
+# Keyed by ``device_key`` so tests can inspect which devices compiled.
+_DEVICE_JITS: dict = {}
+
+
+def _gather_verify_grouped_for(device):
+    """The jitted gather+verify bound to ``device`` (None -> the default
+    device), created on first use and cached for the process lifetime.
+    Guarded: thread-mode shard probing dispatches concurrently, and an
+    unguarded check-then-insert would build (and trace) duplicate jit
+    instances for a not-yet-cached device key."""
+    key = device_key(device)
+    with _LAUNCH_LOCK:
+        fn = _DEVICE_JITS.get(key)
+        if fn is None:
+            fn = jax.jit(
+                _gather_verify_grouped_impl,
+                static_argnames=("p", "blk_c", "use_pallas", "interpret"),
+            )
+            _DEVICE_JITS[key] = fn
+    return fn
+
+
+def device_jit_cache_info() -> Tuple[str, ...]:
+    """Device keys that have a compiled grouped-verify cache (testing)."""
+    return tuple(sorted(_DEVICE_JITS))
 
 
 class PendingKeys:
@@ -331,12 +381,20 @@ def verify_tuples_grouped_launch(
     p: int,
     use_pallas: bool | None = None,
     blk_c: int = DEFAULT_BLK_C,
+    device=None,
 ) -> PendingKeys:
     """Non-blocking form of ``verify_tuples_grouped_op``: pads, dispatches
     the jitted gather+verify, and returns a ``PendingKeys`` handle
     WITHOUT synchronizing with the device. Same padding/trace-cache
-    contract as the blocking op (which is now ``launch().get()``)."""
-    q = jnp.asarray(q_words)
+    contract as the blocking op (which is now ``launch().get()``).
+
+    ``device`` places the launch: the query/index/length inputs are
+    committed to it (``jax.device_put``) and the computation compiles and
+    runs there — ``db_words`` is expected to already be resident on the
+    same device (``AMIHIndex.db_dev`` uploads it once at build). Each
+    device gets its own jit instance (``_gather_verify_grouped_for``) and
+    its own entry in ``LAUNCH_COUNTS_BY_DEVICE``; ``device=None`` keeps
+    the old default-device behavior."""
     idx = np.ascontiguousarray(np.asarray(cand_idx, dtype=np.int32))
     lens = np.asarray(lengths, dtype=np.int32)
     B, C = idx.shape
@@ -347,13 +405,30 @@ def verify_tuples_grouped_launch(
     Bp = pad_bucket(B, minimum=1)
     Cp = pad_bucket(C, minimum=8)
     blk = min(blk_c, Cp)
-    qp = _pad_to(q, 0, Bp)
     idxp = np.zeros((Bp, Cp), dtype=np.int32)
     idxp[:B, :C] = idx
     lensp = np.zeros(Bp, dtype=np.int32)
     lensp[:B] = lens
-    LAUNCH_COUNTS["verify_grouped"] += 1
-    keys = _gather_verify_grouped(
+    if device is not None:
+        # placed launch: pad on the host and upload ONCE to the target
+        # device — staging through jnp on the default device would
+        # re-funnel every shard's launch through device 0, the exact
+        # bottleneck per-shard placement exists to remove
+        qh = np.asarray(q_words)
+        qp_host = np.zeros((Bp,) + qh.shape[1:], dtype=qh.dtype)
+        qp_host[:B] = qh
+        qp = jax.device_put(qp_host, device)
+        idxp = jax.device_put(idxp, device)
+        lensp = jax.device_put(lensp, device)
+    else:
+        qp = _pad_to(jnp.asarray(q_words), 0, Bp)
+    dkey = device_key(device)
+    with _LAUNCH_LOCK:
+        LAUNCH_COUNTS["verify_grouped"] += 1
+        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
+            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+        )
+    keys = _gather_verify_grouped_for(device)(
         qp,
         db_words,
         jnp.asarray(idxp),
@@ -375,6 +450,7 @@ def verify_tuples_grouped_op(
     p: int,
     use_pallas: bool | None = None,
     blk_c: int = DEFAULT_BLK_C,
+    device=None,
 ):
     """Batched AMIH verification: one launch for a whole z-group.
 
@@ -390,9 +466,10 @@ def verify_tuples_grouped_op(
     Candidate rows are gathered from ``db_words`` *on device* — the host
     ships only the (B, C_max) index matrix, never the code rows. For
     host/device overlap use ``verify_tuples_grouped_launch`` and resolve
-    the returned handle when the keys are actually needed.
+    the returned handle when the keys are actually needed. ``device``
+    places the launch on a specific device (see the launch docstring).
     """
     return verify_tuples_grouped_launch(
         q_words, db_words, cand_idx, lengths,
-        p=p, use_pallas=use_pallas, blk_c=blk_c,
+        p=p, use_pallas=use_pallas, blk_c=blk_c, device=device,
     ).get()

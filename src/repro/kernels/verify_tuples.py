@@ -25,6 +25,11 @@ a true (r1, r2)-near neighbor and (b) place it in the emission order
 
 Outputs are exact int32 tuples/keys, so the test oracle comparison is
 equality, not allclose.
+
+This module is the kernel body only. Padding buckets, backend selection,
+non-blocking dispatch, and per-device placement/launch accounting (the
+mesh-resident sharded path runs one of these launches per shard on that
+shard's own device) all live in the wrapper layer, kernels/ops.py.
 """
 
 from __future__ import annotations

@@ -31,9 +31,11 @@ Modules:
                    bounded in-flight window, in-order results.
   - overlap.py   — VerifyOverlap: AMIH tuple-step verify/probe overlap
                    (plugs into AMIHIndex via the ``overlap=`` knob).
-  - shardpool.py — SharedBound + probe_shards_parallel: shard-parallel
+  - shardpool.py — SharedBound + PersistentShardPool: shard-parallel
                    probing for "sharded_amih" with a shared, monotone,
-                   warm-startable k-th-cosine bound.
+                   warm-startable k-th-cosine bound; workers fork once
+                   per engine lifetime and take tasks over pipes
+                   (probe_shards_parallel is the one-shot wrapper).
   - stream.py    — Ticket / stream_search / LatencyTracker: streaming
                    ``run_queued`` results with queue-depth and p50/p99
                    latency counters on EngineStats.
@@ -48,12 +50,18 @@ Engine knobs (see core.engine / shard.engines / serve.retrieval):
 """
 
 from .overlap import VerifyOverlap
-from .shardpool import SharedBound, prime_ids, probe_shards_parallel
+from .shardpool import (
+    PersistentShardPool,
+    SharedBound,
+    prime_ids,
+    probe_shards_parallel,
+)
 from .stages import Stage, StagedExecutor
 from .stream import LatencyTracker, StepResult, Ticket, stream_search
 
 __all__ = [
     "LatencyTracker",
+    "PersistentShardPool",
     "SharedBound",
     "Stage",
     "StagedExecutor",

@@ -82,10 +82,20 @@ class RetrievalConfig:
     # Engine-level pipelining (repro.pipeline): "amih" gets the tuple-step
     # verify/probe overlap (overlap_verify), "sharded_amih" gets
     # shard-parallel probing under the shared warm-started bound
-    # (probe_workers; None -> one worker per shard). Results stay
-    # bit-identical to the sequential engines.
+    # (probe_workers; None -> one worker per shard; the worker pool is
+    # persistent — forked once per engine, released by service.close()).
+    # Results stay bit-identical to the sequential engines.
     pipelined: bool = False
     probe_workers: Optional[int] = None
+    # Worker flavor of the shard-probe pool: "process" (real CPU
+    # parallelism on CPython), "thread" (free-threaded runtimes /
+    # GIL-releasing device verification), or "auto" (process where fork
+    # exists; the pallas verify backend forces thread either way).
+    probe_mode: str = "auto"
+    # Explicit per-shard placement devices for the sharded backends
+    # (round-robin over shards); None derives placement from the mesh,
+    # falling back to the local devices.
+    devices: Optional[Tuple[object, ...]] = None
 
     @property
     def engine(self) -> str:
@@ -96,6 +106,23 @@ class RetrievalConfig:
 
 @dataclass
 class RetrievalService:
+    """End-to-end retrieval serving over one encoder LM + one engine.
+
+    Lifecycle: construct with an encoder config/params and a
+    ``RetrievalConfig``; ``build_index(doc_tokens)`` encodes the corpus,
+    learns AQBC, packs codes and builds the engine; then either
+
+      - ``search_batch(query_tokens, k)`` — one batched ``knn_batch``
+        call, returns ``(ids, sims, EngineStats)``; ``search`` is the
+        B=1 convenience returning the query's own stats object, or
+      - ``submit(query_tokens) -> Ticket`` + ``run_queued(k[, stream])``
+        — the queued/streaming serving loop (see the method docstrings).
+
+    ``close()`` releases engine-held workers (the persistent shard-probe
+    pool, the verify-overlap thread) — call it when retiring a service
+    on a long-lived serving host; GC of the engine does it too.
+    """
+
     cfg: ArchConfig
     params: object
     rcfg: RetrievalConfig = field(default_factory=RetrievalConfig)
@@ -190,6 +217,7 @@ class RetrievalService:
             "mesh": self.rcfg.mesh,
             "num_shards": self.rcfg.num_shards,
             "shard_axes": self.rcfg.shard_axes,
+            "devices": self.rcfg.devices,
         }
         cfg: Dict[str, object] = {}
         if self.rcfg.backend == "amih":
@@ -212,6 +240,7 @@ class RetrievalService:
                 "verify_backend": self.rcfg.verify_backend,
                 "enumeration_cap": self.rcfg.enumeration_cap,
                 "probe_workers": self.rcfg.probe_workers,
+                "probe_mode": self.rcfg.probe_mode,
             }
         self.engine = make_engine(
             self.rcfg.backend, self.db_words, self.rcfg.code_bits, **cfg
@@ -370,3 +399,11 @@ class RetrievalService:
         """Exhaustive baseline over the same codes (cross-check)."""
         q_words = self.encode_query(query_tokens)[0]
         return linear_scan_knn(q_words, self.db_words, k)
+
+    # ------------------------------------------------------------ lifecycle
+    def close(self) -> None:
+        """Release engine-held workers (persistent shard-probe pool,
+        verify-overlap thread). Idempotent; safe before build_index."""
+        engine, close = self.engine, getattr(self.engine, "close", None)
+        if engine is not None and callable(close):
+            close()

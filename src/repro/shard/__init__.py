@@ -2,11 +2,14 @@
 
 Layout:
   - plan.py        — ShardPlan: balanced row partition + global-id offsets
-                     + serializable summary (the layout contract).
+                     + per-shard device assignment + serializable summary
+                     (the layout contract).
   - distributed.py — device-sharded scan primitives (shard_map + O(K)
-                     all-gather merge), absorbed from core/distributed.
+                     all-gather merge). ``repro.core.distributed`` is a
+                     deprecated re-export shim over this module.
   - engines.py     — "sharded_scan" / "sharded_amih" SearchEngine
-                     backends, registered on import.
+                     backends, registered on import; each shard's state
+                     is placed on its plan-assigned device.
 
 ``make_engine("sharded_scan" | "sharded_amih", ...)`` imports this
 package on demand (see core.engine.make_engine), so host-only callers
@@ -19,12 +22,13 @@ from .distributed import (
     sharded_scan_topk,
 )
 from .engines import ShardedAMIHEngine, ShardedScanEngine
-from .plan import ShardPlan
+from .plan import ShardPlan, devices_from_mesh
 
 __all__ = [
     "ShardPlan",
     "ShardedAMIHEngine",
     "ShardedScanEngine",
+    "devices_from_mesh",
     "make_retrieval_step",
     "sharded_scan_candidates",
     "sharded_scan_topk",

@@ -20,7 +20,12 @@ Two merge shapes:
 
 This module is pure pjit/shard_map JAX and is exercised both by tests
 (with 8 fake CPU devices in a subprocess) and by the production-mesh
-dry-run (``retrieval_step``).
+dry-run (``retrieval_step``). It covers the *scan* side of mesh
+residency; the sharded AMIH engine reaches the same placement without
+shard_map — each shard's index commits its codes to the plan-assigned
+device (``ShardPlan.devices``) and issues per-device verify launches
+through kernels/ops.py (host-driven, since probing is a host-side table
+walk).
 """
 
 from __future__ import annotations

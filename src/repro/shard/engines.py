@@ -36,6 +36,7 @@ contributed, device launches, early stops).
 
 from __future__ import annotations
 
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -56,21 +57,36 @@ def _resolve_plan(
     num_shards: Optional[int],
     shard_axes,
     plan: Optional[ShardPlan],
+    devices=None,
 ) -> ShardPlan:
-    """One plan from whichever knob the caller provided (plan > mesh >
-    num_shards > one shard per local device)."""
+    """One PLACED plan from whichever knob the caller provided (plan >
+    mesh > num_shards > one shard per local device). Placement: an
+    explicit ``devices`` list wins; a mesh-derived plan is already
+    placed on its mesh devices; any still-unplaced plan — including a
+    caller-built one, notably ``ShardPlan.from_summary`` restores,
+    which are always unplaced — round-robins the local devices (a
+    single-device host assigns every shard to it — exactly the
+    pre-placement layout). A caller plan that already carries devices
+    is trusted as-is."""
     n = np.asarray(db_words).shape[0]
     if plan is not None:
         if plan.n != n:
             raise ValueError(f"plan covers n={plan.n}, DB has n={n}")
-        return plan
-    if mesh is not None:
-        return ShardPlan.from_mesh(mesh, n, shard_axes=shard_axes)
-    if num_shards is None:
+    elif mesh is not None:
+        plan = ShardPlan.from_mesh(mesh, n, shard_axes=shard_axes)
+    else:
+        if num_shards is None:
+            import jax
+
+            num_shards = max(1, len(jax.devices()))
+        plan = ShardPlan.balanced(n, num_shards)
+    if devices is not None:
+        return plan.place(devices)
+    if not plan.devices:
         import jax
 
-        num_shards = max(1, len(jax.devices()))
-    return ShardPlan.balanced(n, num_shards)
+        plan = plan.place(jax.devices())
+    return plan
 
 
 def _preselect_slack(p: int) -> int:
@@ -114,11 +130,13 @@ class ShardedScanEngine(SearchEngine):
         shard_axes: Optional[Tuple[str, ...]] = None,
         plan: Optional[ShardPlan] = None,
         chunk: int = 1 << 14,
+        devices=None,
         **cfg: Any,
     ) -> "ShardedScanEngine":
         if cfg:
             raise TypeError(f"unknown sharded_scan options: {sorted(cfg)}")
-        plan = _resolve_plan(db_words, mesh, num_shards, shard_axes, plan)
+        plan = _resolve_plan(db_words, mesh, num_shards, shard_axes, plan,
+                             devices)
         return cls(db_words, p, plan, mesh, chunk)
 
     @property
@@ -166,6 +184,7 @@ class ShardedScanEngine(SearchEngine):
                 "rows": self.plan.counts[s],
                 "candidates": int(shard_counts[s]),
                 "launches": 1,
+                "device": str(self.plan.device_for(s)),
             }
             for s in range(self.plan.num_shards)
         ]
@@ -204,14 +223,22 @@ class ShardedScanEngine(SearchEngine):
 
     # ------------------------------------------------------------ host mode
     def _candidates_host(self, q, k_fetch):
-        """No mesh: walk the shards on the default device, same math."""
+        """No mesh: walk the shards as a host loop, each shard's slice
+        resident on — and scanned on — its assigned plan device (all the
+        same device on a single-device host, the pre-placement layout)."""
+        import jax
         import jax.numpy as jnp
 
         from ..kernels import ops
 
         if not self._shard_dev:
             self._shard_dev = [
-                jnp.asarray(self.db_words[self.plan.shard_slice(s)])
+                jax.device_put(
+                    self.db_words[self.plan.shard_slice(s)],
+                    self.plan.device_for(s),
+                )
+                if self.plan.device_for(s) is not None
+                else jnp.asarray(self.db_words[self.plan.shard_slice(s)])
                 for s in range(self.plan.num_shards)
             ]
         B = q.shape[0]
@@ -245,6 +272,16 @@ class ShardedAMIHEngine(SearchEngine):
     sequential probing with the pooled k-th cosine as each next shard's
     early-termination bound, exact lexsort merge.
 
+    Each shard's index is DEVICE-PLACED from the plan's assignment map
+    (mesh-derived, an explicit ``devices`` list, or the local devices
+    round-robin): its codes upload to — and its grouped candidate
+    verification runs on — the shard's own device, so verify memory and
+    bandwidth scale with the shard count instead of serializing through
+    device 0. Only the O(K) per-shard result lists ever cross back to
+    the host merge. ``stats.per_shard[s]["device"]`` records where each
+    shard's work landed (``kernels.ops.LAUNCH_COUNTS_BY_DEVICE`` counts
+    the launches per device).
+
     ``probe_workers`` switches shard probing from the sequential chain to
     the pipelined shard pool (repro.pipeline.shardpool): every shard
     probes concurrently — forked worker processes by default (the
@@ -256,7 +293,10 @@ class ShardedAMIHEngine(SearchEngine):
     before any probing begins (the sequential chain gives shard 0 no
     bound at all). Still exact: the shared bound is always the k-th best
     sim of some subset of real rows, hence a valid lower bound on the
-    global k-th (see shardpool.py).
+    global k-th (see shardpool.py). The pool is PERSISTENT: workers fork
+    once, on the engine's first parallel call, and each later call ships
+    its task over the standing worker pipes (``engine.close()`` releases
+    them; GC does too).
     """
 
     name = "sharded_amih"
@@ -291,6 +331,11 @@ class ShardedAMIHEngine(SearchEngine):
         self.probe_workers = probe_workers
         self.prime_bound = prime_bound
         self.probe_mode = probe_mode
+        self._pool = None           # PersistentShardPool, forked on first use
+        self._closed = False
+        # guards _pool/_closed: a knn_batch racing close() must not
+        # rebuild (and leak) a fresh worker pool on a closed engine
+        self._pool_lock = threading.Lock()
 
     @classmethod
     def build(
@@ -307,19 +352,25 @@ class ShardedAMIHEngine(SearchEngine):
         probe_workers: Optional[int] = None,
         prime_bound: bool = True,
         probe_mode: str = "auto",
+        devices=None,
         **cfg: Any,
     ) -> "ShardedAMIHEngine":
         if cfg:
             raise TypeError(f"unknown sharded_amih options: {sorted(cfg)}")
         db = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
-        plan = _resolve_plan(db, mesh, num_shards, shard_axes, plan)
+        plan = _resolve_plan(db, mesh, num_shards, shard_axes, plan,
+                             devices)
         indexes = []
         for s in range(plan.num_shards):
             if plan.counts[s] == 0:
                 continue
+            # each shard's index is PLACED: its db_dev upload and its
+            # grouped-verify launches target the shard's own device, so
+            # verification memory/bandwidth scale with the shard count
             indexes.append((s, AMIHIndex.build(
                 db[plan.shard_slice(s)], p, m=m,
                 verify_backend=verify_backend, id_offset=plan.starts[s],
+                device=plan.device_for(s),
             )))
         return cls(db, p, plan, indexes, enumeration_cap,
                    probe_workers, prime_bound, probe_mode)
@@ -327,6 +378,23 @@ class ShardedAMIHEngine(SearchEngine):
     @property
     def n(self) -> int:
         return self.db_words.shape[0]
+
+    def close(self) -> None:
+        """Release the persistent probe-worker pool (idempotent; also run
+        on GC, so engine churn never leaks forked workers). A closed
+        engine still answers ``knn_batch`` — parallel calls fall back to
+        the sequential chain instead of re-forking workers."""
+        with self._pool_lock:
+            self._closed = True
+            pool, self._pool = self._pool, None
+        if pool is not None:
+            pool.close()
+
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:
+            pass   # interpreter shutdown: pipes may already be gone
 
     def _use_parallel(self, B: int) -> bool:
         import multiprocessing
@@ -384,6 +452,7 @@ class ShardedAMIHEngine(SearchEngine):
                 # index counters never reach the parent's objects)
                 "launches": launches,
                 "early_stopped": early_stopped,
+                "device": str(index.device),
             }
             for counter in ("probes", "retrieved", "verified",
                             "tuples_processed", "fell_back_to_scan"):
@@ -438,40 +507,62 @@ class ShardedAMIHEngine(SearchEngine):
                             index.verify_launches - launches0)
         return shard_out
 
+    def _probe_pool(self):
+        """The engine's PersistentShardPool, built once: workers fork on
+        the first parallel call and persist for the engine lifetime
+        (``close()`` releases them). Returns None on a closed engine —
+        the caller falls back to the sequential chain rather than
+        re-forking workers nothing will ever release."""
+        with self._pool_lock:
+            if self._closed:
+                return None
+            if self._pool is None:
+                from ..pipeline.shardpool import (
+                    PersistentShardPool,
+                    resolve_probe_mode,
+                )
+
+                mode = resolve_probe_mode(self.probe_mode)
+                if mode == "process" and any(
+                    ix.verify_backend == "pallas" for _, ix in self.indexes
+                ):
+                    # a fork-child of a jax-initialized parent must never
+                    # dispatch jax ops (deadlock risk); device
+                    # verification also releases the GIL, so threads are
+                    # the right pool for the mesh-resident verify path
+                    mode = "thread"
+                self._pool = PersistentShardPool(
+                    self.indexes, AMIHStats,
+                    max_workers=self.probe_workers, mode=mode,
+                )
+            return self._pool
+
     def _probe_parallel(self, q, k_eff):
         """Pipelined shard pool: all shards probe concurrently under one
-        shared monotone bound, warm-started from a row sample."""
-        from ..pipeline.shardpool import (
-            SharedBound,
-            prime_ids,
-            probe_shards_parallel,
-            resolve_probe_mode,
-        )
+        shared monotone bound, warm-started from a row sample. The pool
+        is persistent — forked once per engine lifetime, each call ships
+        its task over the standing worker pipes."""
+        from ..pipeline.shardpool import SharedBound, prime_ids
 
+        pool = self._probe_pool()
+        if pool is None:               # engine closed: no new workers
+            return self._probe_sequential(q, k_eff)
         B = q.shape[0]
-        mode = resolve_probe_mode(self.probe_mode)
-        if mode == "process" and any(
-            ix.verify_backend == "pallas" for _, ix in self.indexes
-        ):
-            # a fork-child of a jax-initialized parent must never
-            # dispatch jax ops (deadlock risk); device verification also
-            # releases the GIL, so threads are the right pool there
-            mode = "thread"
-        shared = SharedBound(
-            B, k_eff, shared_memory=(mode == "process")
-        )
+        shared = SharedBound(B, k_eff)
         if self.prime_bound:
             sample = prime_ids(self.n, k_eff)
             for i in range(B):
                 shared.offer(i, sample, sims_for_ids(
                     q[i], self.db_words, sample
                 ))
-        return probe_shards_parallel(
-            self.indexes, q, k_eff, shared, AMIHStats,
-            enumeration_cap=self.enumeration_cap,
-            max_workers=self.probe_workers,
-            mode=mode,
-        )
+        try:
+            return pool.probe(
+                q, k_eff, shared, enumeration_cap=self.enumeration_cap
+            )
+        except RuntimeError:
+            if pool._closed:           # close() won the race mid-call:
+                return self._probe_sequential(q, k_eff)
+            raise                      # a genuinely broken pool
 
     @staticmethod
     def _fold_stats(into: AMIHStats, src: AMIHStats) -> None:

@@ -10,23 +10,32 @@ One plan answers every layout question the sharded engines ask:
     every shard occupies an equal-size slice of a (S * rows_padded, W)
     array so the mesh can shard it evenly; pad rows are zero codes that
     the scan masks out via per-shard ``counts``,
+  - which DEVICE owns shard ``s`` (``devices`` / ``device_for``): the
+    placement map the mesh-resident sharded AMIH engine uses to upload
+    each shard's codes to — and verify candidates on — that shard's own
+    device instead of funnelling every shard through device 0,
   - a JSON-serializable ``summary()`` (and ``from_summary`` inverse) so a
-    serving fleet can ship the layout next to the checkpoint.
+    serving fleet can ship the layout next to the checkpoint (device
+    assignments serialize as strings, for observability only — a fresh
+    host re-derives its own placement via ``place``/``from_mesh``).
 
 Plans are mesh-agnostic: ``balanced(n, num_shards)`` covers host-side
 sharding (one process walking the shards), ``from_mesh(mesh, n)`` derives
-the shard count from the mesh axes the DB rows are split over (the
-``pod``/``data`` axes of the production meshes — any mesh axis works).
+the shard count — and the per-shard device assignment — from the mesh
+axes the DB rows are split over (the ``pod``/``data`` axes of the
+production meshes — any mesh axis works). ``place(devices)`` assigns an
+explicit device list round-robin (wrapping when there are fewer devices
+than shards — the single-device host degenerates to today's layout).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-__all__ = ["ShardPlan", "resolve_mesh_axes"]
+__all__ = ["ShardPlan", "devices_from_mesh", "resolve_mesh_axes"]
 
 
 def resolve_mesh_axes(mesh, shard_axes=None):
@@ -44,14 +53,38 @@ def resolve_mesh_axes(mesh, shard_axes=None):
     return axes, n_shards
 
 
+def devices_from_mesh(mesh, shard_axes=None) -> Tuple[object, ...]:
+    """One owner device per shard, in linear shard-index order (row-major
+    over the shard axes — the same order ``_shard_index`` walks them in
+    shard/distributed.py). When the shard axes are a strict subset of the
+    mesh axes, each shard's group of devices is represented by its first
+    device (the one ``shard_map`` gives replica index 0 on the remaining
+    axes)."""
+    axes, n_shards = resolve_mesh_axes(mesh, shard_axes)
+    names = list(mesh.axis_names)
+    perm = [names.index(a) for a in axes] + [
+        i for i, a in enumerate(names) if a not in axes
+    ]
+    dev = np.transpose(np.asarray(mesh.devices), perm).reshape(n_shards, -1)
+    return tuple(dev[:, 0])
+
+
 @dataclass(frozen=True)
 class ShardPlan:
-    """Balanced row partition of ``n`` DB rows into ``num_shards`` shards."""
+    """Balanced row partition of ``n`` DB rows into ``num_shards`` shards.
+
+    ``devices`` (when non-empty) is the per-shard placement map: entry
+    ``s`` is the device shard ``s``'s codes live on and its candidate
+    verification runs on. It is excluded from equality/serialization
+    round-trips — placement is a property of the serving host, not of
+    the layout contract.
+    """
 
     n: int
     starts: Tuple[int, ...]
     counts: Tuple[int, ...]
     axis_names: Tuple[str, ...] = ()
+    devices: Tuple[object, ...] = field(default=(), compare=False)
 
     def __post_init__(self):
         if len(self.starts) != len(self.counts) or not self.starts:
@@ -59,6 +92,11 @@ class ShardPlan:
         if sum(self.counts) != self.n:
             raise ValueError(
                 f"counts sum to {sum(self.counts)}, expected n={self.n}"
+            )
+        if self.devices and len(self.devices) != len(self.counts):
+            raise ValueError(
+                f"devices maps {len(self.devices)} shards, plan has "
+                f"{len(self.counts)}"
             )
 
     # ------------------------------------------------------------ builders
@@ -90,13 +128,37 @@ class ShardPlan:
         shard_axes: Optional[Tuple[str, ...]] = None,
     ) -> "ShardPlan":
         """Plan over the product of the mesh axes the DB rows shard across
-        (default: every mesh axis, matching ``sharded_scan_topk``)."""
+        (default: every mesh axis, matching ``sharded_scan_topk``). The
+        per-shard ``devices`` map is derived from the mesh too
+        (``devices_from_mesh``), so shard ``s``'s index state lands on the
+        device that owns shard ``s``'s rows in the mesh layout."""
         axes, num_shards = resolve_mesh_axes(mesh, shard_axes)
         if not axes:
             raise ValueError(
                 f"no shard axes among mesh axes {tuple(mesh.axis_names)}"
             )
-        return cls.balanced(n, num_shards, axis_names=axes)
+        plan = cls.balanced(n, num_shards, axis_names=axes)
+        return plan.place(devices_from_mesh(mesh, axes))
+
+    # ----------------------------------------------------------- placement
+    def place(self, devices) -> "ShardPlan":
+        """A copy of this plan with ``devices`` assigned round-robin over
+        the shards: shard ``s`` gets ``devices[s % len(devices)]``, so
+        fewer devices than shards wraps (devices host several shards —
+        the 1-device host maps every shard to it, exactly the pre-placed
+        behavior) and extra devices are simply left idle. An empty/None
+        list clears the placement."""
+        devices = tuple(devices or ())
+        if not devices:
+            return replace(self, devices=())
+        return replace(self, devices=tuple(
+            devices[s % len(devices)] for s in range(self.num_shards)
+        ))
+
+    def device_for(self, s: int):
+        """Shard ``s``'s assigned device (None when the plan is unplaced
+        — callers fall back to the default device)."""
+        return self.devices[s] if self.devices else None
 
     # ------------------------------------------------------------ geometry
     @property
@@ -129,8 +191,10 @@ class ShardPlan:
 
     # -------------------------------------------------------- serialization
     def summary(self) -> Dict[str, object]:
-        """JSON-serializable description (round-trips via from_summary)."""
-        return {
+        """JSON-serializable description (round-trips via from_summary;
+        device assignments serialize as strings and are observability
+        only — ``from_summary`` returns an unplaced plan)."""
+        out = {
             "n": self.n,
             "num_shards": self.num_shards,
             "rows_padded": self.rows_padded,
@@ -138,6 +202,9 @@ class ShardPlan:
             "counts": list(self.counts),
             "axis_names": list(self.axis_names),
         }
+        if self.devices:
+            out["devices"] = [str(d) for d in self.devices]
+        return out
 
     @classmethod
     def from_summary(cls, d: Dict[str, object]) -> "ShardPlan":

@@ -160,6 +160,64 @@ def test_shard_parallel_matches_sequential(mode):
     assert sum(d["launches"] for d in st_p.per_shard) > 0
 
 
+@pytest.mark.parametrize("mode", ["process", "thread"])
+def test_persistent_pool_forks_once_per_engine(mode):
+    """The ROADMAP's persistent probe pool: workers start on the first
+    parallel call and every later call reuses them — fork count and
+    worker PIDs stay flat across calls, results stay exact, and
+    ``close()`` releases the workers (idempotently)."""
+    p, n, B, k, S = 64, 900, 12, 8, 8
+    db_bits = synthetic_binary_codes(n, p, seed=40)
+    db = pack_bits(db_bits)
+    eng = _force_pool(make_engine(
+        "sharded_amih", db, p, num_shards=S, probe_workers=S,
+        probe_mode=mode,
+    ))
+    assert eng._pool is None                   # no workers before first call
+    qs1 = pack_bits(synthetic_queries(db_bits, B, seed=41))
+    qs2 = pack_bits(synthetic_queries(db_bits, B, seed=42))
+    ids1, sims1, _ = eng.knn_batch(qs1, k)
+    pool = eng._pool
+    assert pool is not None
+    forks0, pids0 = pool.forks, pool.worker_pids()
+    if mode == "process":
+        assert forks0 == len(pool.groups) > 0
+        assert len(pids0) == forks0
+    else:
+        assert forks0 == 0 and pids0 == []
+    for qs in (qs2, qs1):                      # repeat calls, same workers
+        ids, sims, _ = eng.knn_batch(qs, k)
+        _check_exact(ids, sims, qs, db, k)
+    _check_exact(ids1, sims1, qs1, db, k)
+    assert eng._pool is pool
+    assert pool.forks == forks0 and pool.worker_pids() == pids0
+    eng.close()
+    assert eng._pool is None
+    eng.close()                                # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        pool.probe(qs1, k, None)
+
+
+def test_persistent_pool_batch_size_changes_between_calls():
+    """The per-call bounds segment is sized to the call's batch, so one
+    pool serves B=1 and B=32 calls alike without re-forking."""
+    p, n, k, S = 64, 700, 6, 8
+    db_bits = synthetic_binary_codes(n, p, seed=43)
+    db = pack_bits(db_bits)
+    eng = _force_pool(make_engine(
+        "sharded_amih", db, p, num_shards=S, probe_workers=S,
+        probe_mode="process",
+    ))
+    forks = None
+    for B in (1, 32, 4):
+        qs = pack_bits(synthetic_queries(db_bits, B, seed=44 + B))
+        ids, sims, _ = eng.knn_batch(qs, k)
+        _check_exact(ids, sims, qs, db, min(k, n))
+        forks = eng._pool.forks if forks is None else forks
+        assert eng._pool.forks == forks
+    eng.close()
+
+
 def test_shard_parallel_k_exceeds_shard_rows():
     p, n, k, S = 64, 50, 40, 8                 # ~6 rows/shard, k=40
     db_bits = synthetic_binary_codes(n, p, seed=9)

@@ -190,14 +190,135 @@ def test_sharded_scan_per_shard_candidate_counters():
 
 
 def test_plan_knob_passes_through_make_engine():
+    import jax
+
     p, n = 64, 100
     db_bits = synthetic_binary_codes(n, p, seed=11)
     db = pack_bits(db_bits)
     plan = ShardPlan.balanced(n, 3)
     eng = make_engine("sharded_scan", db, p, plan=plan)
-    assert eng.plan is plan
+    # layout passes through untouched; an UNPLACED caller plan (e.g. a
+    # from_summary restore) is placed on the local devices like every
+    # other path, so it never silently reverts to the device-0 funnel
+    assert eng.plan == plan and eng.plan.counts == plan.counts
+    assert len(eng.plan.devices) == plan.num_shards
+    assert eng.plan.devices[0] == jax.devices()[0]
+    # an already-placed caller plan is trusted as-is (identity kept)
+    placed = plan.place(jax.devices())
+    assert make_engine("sharded_scan", db, p, plan=placed).plan is placed
     with pytest.raises(ValueError, match="plan covers"):
         make_engine("sharded_scan", db, p, plan=ShardPlan.balanced(n + 1, 3))
+
+
+# --------------------------------------------------------- device placement
+def test_plan_place_round_robin_and_validation():
+    plan = ShardPlan.balanced(10, 4)
+    assert plan.devices == () and plan.device_for(0) is None
+    placed = plan.place(["d0", "d1", "d2"])      # fewer devices than shards
+    assert placed.devices == ("d0", "d1", "d2", "d0")
+    assert placed.device_for(3) == "d0"
+    assert placed.counts == plan.counts          # layout untouched
+    assert placed == plan                        # devices excluded from eq
+    assert placed.place(None).devices == ()      # clearing
+    wide = plan.place(["a", "b", "c", "d", "e"])  # extra devices idle
+    assert wide.devices == ("a", "b", "c", "d")
+    # summaries carry the placement as strings, and round-trip unplaced
+    s = placed.summary()
+    assert s["devices"] == ["d0", "d1", "d2", "d0"]
+    assert ShardPlan.from_summary(json.loads(json.dumps(s))).devices == ()
+    with pytest.raises(ValueError, match="devices maps"):
+        ShardPlan(n=10, starts=placed.starts, counts=placed.counts,
+                  devices=("d0",))
+
+
+def test_host_engines_record_placement_single_device():
+    """On a 1-device host every shard lands on that device — recorded in
+    the plan and in each per_shard stats dict."""
+    import jax
+
+    p, n, S = 64, 400, 4
+    db_bits = synthetic_binary_codes(n, p, seed=30)
+    db = pack_bits(db_bits)
+    qs = pack_bits(synthetic_queries(db_bits, 4, seed=31))
+    dev = str(jax.devices()[0])
+    for backend in ("sharded_scan", "sharded_amih"):
+        eng = make_engine(backend, db, p, num_shards=S)
+        assert [str(d) for d in eng.plan.devices] == [dev] * S
+        _, _, stats = eng.knn_batch(qs, 5)
+        assert [d["device"] for d in stats.per_shard] == [dev] * S
+
+
+def test_sharded_amih_verify_runs_on_assigned_devices_mesh():
+    """The tentpole contract on 8 fake devices: each shard's db_dev is
+    committed to its plan device, grouped-verify launches split across
+    the devices (per-device launch counters move, the default-device
+    counter does not), and results stay exact."""
+    _run("""
+        from repro.core import make_engine, linear_scan_knn, pack_bits
+        from repro.data import synthetic_binary_codes, synthetic_queries
+        from repro.kernels import ops
+        from repro.launch.mesh import make_mesh
+
+        p, n, B, k = 64, 1499, 8, 7
+        db_bits = synthetic_binary_codes(n, p, seed=0)
+        db = pack_bits(db_bits)
+        qs = pack_bits(synthetic_queries(db_bits, B, seed=1))
+        mesh = make_mesh((4, 2), ("data", "model"))
+        eng = make_engine("sharded_amih", db, p, mesh=mesh,
+                          verify_backend="pallas")
+        assert eng.plan.num_shards == 8
+        assert len({str(d) for d in eng.plan.devices}) == 8
+        for s, ix in eng.indexes:
+            (got,) = ix.db_dev.devices()
+            assert got == eng.plan.device_for(s), (s, got)
+        before = dict(ops.LAUNCH_COUNTS_BY_DEVICE)
+        ids, sims, st = eng.knn_batch(qs, k)
+        for i in range(B):
+            _, sims_l = linear_scan_knn(qs[i], db, k)
+            np.testing.assert_array_equal(sims[i], sims_l)
+        delta = {d: c - before.get(d, 0)
+                 for d, c in ops.LAUNCH_COUNTS_BY_DEVICE.items()}
+        active = {d for d, c in delta.items() if c > 0}
+        assert len(active) == 8 and "default" not in active, delta
+        # stats record the placement and the per-shard launch counts
+        # measured where the verifies ran
+        for d in st.per_shard:
+            assert d["device"].startswith("TFRT_CPU_")
+            assert delta[d["device"]] >= d["launches"] > 0
+        # one jit instance per device
+        assert len(ops.device_jit_cache_info()) >= 8
+        print("OK")
+    """)
+
+
+def test_sharded_amih_uneven_device_counts_mesh():
+    """Placement stays exact when shards != devices: an explicit device
+    list wraps round-robin (8 shards, 3 devices) and leaves extras idle
+    (5 shards, 8 devices)."""
+    _run("""
+        from repro.core import make_engine, linear_scan_knn, pack_bits
+        from repro.data import synthetic_binary_codes, synthetic_queries
+
+        p, n, B, k = 64, 997, 4, 9
+        db_bits = synthetic_binary_codes(n, p, seed=2)
+        db = pack_bits(db_bits)
+        qs = pack_bits(synthetic_queries(db_bits, B, seed=3))
+        devs = jax.devices()
+        few = make_engine("sharded_amih", db, p, num_shards=8,
+                          devices=devs[:3], verify_backend="pallas")
+        assert [str(d) for d in few.plan.devices] == \\
+            [str(devs[s % 3]) for s in range(8)]
+        many = make_engine("sharded_amih", db, p, num_shards=5,
+                           devices=devs, verify_backend="pallas")
+        assert [str(d) for d in many.plan.devices] == \\
+            [str(d) for d in devs[:5]]
+        for eng in (few, many):
+            ids, sims, _ = eng.knn_batch(qs, k)
+            for i in range(B):
+                _, sims_l = linear_scan_knn(qs[i], db, k)
+                np.testing.assert_array_equal(sims[i], sims_l)
+        print("OK")
+    """)
 
 
 # ------------------------------------------------- deprecated shim
