@@ -19,6 +19,12 @@ A ``--shards`` axis times the pod-scale backends ("sharded_scan" /
 shard count (default 1 vs 8), so the perf trajectory covers the sharded
 cells too.
 
+A ``--probe-backend`` axis times every amih / sharded_amih cell under
+both probing walks — "host" (the reference Python walk) and "device"
+(the fused one-launch-per-z-group walk, repro.core.probe_device) — and
+each row records which one answered it, so scripts/bench_check.py gates
+host-vs-host and device-vs-device separately.
+
 Emits artifacts/bench/amih_vs_scan.csv plus a machine-readable
 BENCH_engine.json at the repo root (per-backend, per-batch-size,
 per-shard-count latency/probes/verifications) so future PRs have a perf
@@ -47,6 +53,7 @@ else:
     from .common import make_db, make_queries, write_csv
 
 from repro.core import make_engine
+from repro.core.probing import probing_cache_clear
 
 BENCH_JSON = os.path.join(_ROOT, "BENCH_engine.json")
 
@@ -94,7 +101,7 @@ def _time_seed_loop(index, qs, k):
     for _ in range(REPEATS):
         t0 = time.perf_counter()
         for q in qs:
-            index._probing_cache.clear()
+            probing_cache_clear()
             index.knn(q, k)
         best = min(best, time.perf_counter() - t0)
     return best
@@ -103,7 +110,7 @@ def _time_seed_loop(index, qs, k):
 def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
         ps=(64, 128), ks=(1, 10, 100), out_json: str | None = None,
         sizes=None, csv_name: str = "amih_vs_scan.csv",
-        shards=(1, 8)):
+        shards=(1, 8), probe_backends=("host", "device")):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
     if sizes is None:
         sizes = [n for n in (10_000, 100_000, 1_000_000, 10_000_000)
@@ -114,12 +121,17 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
 
     def emit(backend, p, n, K, batch, n_shards, t, totals, *,
              m_tables=0, t_seed=None, t_scan=None, t_build=0.0,
-             devices=None):
+             devices=None, probe_backend="host"):
         t_ref = t_scan if t_scan is not None else t
         rows.append({
             "backend": backend, "p": p, "n": n, "K": K,
             "batch": batch, "shards": n_shards, "queries": nq,
             "m_tables": m_tables,
+            # which probing walk answered the cell: "host" (reference
+            # Python walk) or "device" (fused one-launch-per-z-group).
+            # bench_check keys cells on it, so the two backends gate
+            # against their own baselines.
+            "probe_backend": probe_backend,
             # distinct placement devices the shards landed on (sharded
             # backends; 1 on a single-device host). bench_check excludes
             # a cell from the gate when this changed between runs.
@@ -146,28 +158,37 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
         for n in sizes:
             db_bits, db = make_db(n, p, seed=0)
             _, qs = make_queries(db_bits, nq, seed=1)
-            t_build0 = time.perf_counter()
             # query_cache_size=0: the bench measures probing, and its
             # repeated sweeps over one query set would otherwise time the
             # hot-query LRU instead of the algorithm.
-            amih = make_engine("amih", db, p, query_cache_size=0)
-            t_build = time.perf_counter() - t_build0
+            engines, builds = {}, {}
+            for pb in probe_backends:
+                t_build0 = time.perf_counter()
+                engines[pb] = make_engine(
+                    "amih", db, p, query_cache_size=0, probe_backend=pb
+                )
+                builds[pb] = time.perf_counter() - t_build0
             scan = make_engine("linear_scan", db, p)
+            ref = engines.get("host", engines[probe_backends[0]])
             for K in ks:
-                t_seed = _time_seed_loop(amih.index, qs, K)
+                t_seed = _time_seed_loop(ref.index, qs, K)
                 t_scan, _ = _time_batched(scan, qs, K, max(batches))
-                for batch in batches:
-                    t_amih, totals = _time_batched(amih, qs, K, batch)
-                    r = emit("amih", p, n, K, batch, 1, t_amih, totals,
-                             m_tables=amih.index.m, t_seed=t_seed,
-                             t_scan=t_scan, t_build=t_build)
-                    print(
-                        f"p={p} n={n:>9} K={K:>3} B={batch:>3} "
-                        f"amih={r['ms_per_query']:.3f}ms/q "
-                        f"seed_loop={r['seed_loop_ms_per_query']:.3f}ms/q "
-                        f"scan={r['scan_ms_per_query']:.3f}ms/q "
-                        f"({r['speedup_vs_scan']}x)"
-                    )
+                for pb in probe_backends:
+                    for batch in batches:
+                        t_amih, totals = _time_batched(
+                            engines[pb], qs, K, batch
+                        )
+                        r = emit("amih", p, n, K, batch, 1, t_amih,
+                                 totals, m_tables=ref.index.m,
+                                 t_seed=t_seed, t_scan=t_scan,
+                                 t_build=builds[pb], probe_backend=pb)
+                        print(
+                            f"p={p} n={n:>9} K={K:>3} B={batch:>3} "
+                            f"amih[{pb}]={r['ms_per_query']:.3f}ms/q "
+                            f"seed_loop={r['seed_loop_ms_per_query']:.3f}"
+                            f"ms/q scan={r['scan_ms_per_query']:.3f}ms/q "
+                            f"({r['speedup_vs_scan']}x)"
+                        )
                 emit("linear_scan", p, n, K, max(batches), 1, t_scan,
                      {"verified": n * nq}, t_scan=t_scan)
             # sharded cells: the pod-scale backends over S host shards
@@ -177,20 +198,30 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                 if S > n:
                     continue
                 sh_scan = make_engine("sharded_scan", db, p, num_shards=S)
-                sh_amih = make_engine("sharded_amih", db, p, num_shards=S)
-                n_dev = len({str(d) for d in sh_amih.plan.devices}) or 1
+                sh_amihs = {
+                    pb: make_engine("sharded_amih", db, p, num_shards=S,
+                                    probe_backend=pb)
+                    for pb in probe_backends
+                }
+                any_sh = next(iter(sh_amihs.values()))
+                n_dev = len({str(d) for d in any_sh.plan.devices}) or 1
                 for K in ks:
                     t_s, tot_s = _time_batched(sh_scan, qs, K, max(batches))
                     emit("sharded_scan", p, n, K, max(batches), S, t_s,
                          tot_s, devices=n_dev)
-                    t_a, tot_a = _time_batched(sh_amih, qs, K, max(batches))
-                    r = emit("sharded_amih", p, n, K, max(batches), S, t_a,
-                             tot_a, devices=n_dev)
-                    print(
-                        f"p={p} n={n:>9} K={K:>3} S={S:>2} "
-                        f"sharded_amih={r['ms_per_query']:.3f}ms/q "
-                        f"sharded_scan={1e3 * t_s / nq:.3f}ms/q"
-                    )
+                    for pb in probe_backends:
+                        t_a, tot_a = _time_batched(
+                            sh_amihs[pb], qs, K, max(batches)
+                        )
+                        r = emit("sharded_amih", p, n, K, max(batches), S,
+                                 t_a, tot_a, devices=n_dev,
+                                 probe_backend=pb)
+                        print(
+                            f"p={p} n={n:>9} K={K:>3} S={S:>2} "
+                            f"sharded_amih[{pb}]="
+                            f"{r['ms_per_query']:.3f}ms/q "
+                            f"sharded_scan={1e3 * t_s / nq:.3f}ms/q"
+                        )
     path = write_csv(csv_name, rows)
     payload = {
         "bench": "engine",
@@ -198,6 +229,7 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
             "sizes": sizes, "ps": list(ps), "ks": list(ks),
             "batches": list(batches), "queries": nq,
             "shards": list(shards),
+            "probe_backends": list(probe_backends),
             "codes": "synthetic clustered (AQBC-like)",
         },
         "rows": rows,
@@ -225,6 +257,11 @@ def _parse_args(argv=None):
                     default=[1, 8],
                     help="shard counts for the sharded_scan/sharded_amih "
                          "cells (host-mode ShardPlan shards)")
+    ap.add_argument("--probe-backend", type=str, nargs="+",
+                    default=["host", "device"],
+                    choices=["host", "device"],
+                    help="probing walks to time for the amih cells "
+                         "(axis of the sweep)")
     ap.add_argument("--max-n", type=int, default=None,
                     help="largest DB size (default REPRO_BENCH_MAX_N or 1e6)")
     ap.add_argument("--nq", type=int, default=64, help="queries per cell")
@@ -240,4 +277,5 @@ if __name__ == "__main__":
     a = _parse_args()
     run(max_n=a.max_n, nq=a.nq, batches=tuple(sorted(set(a.batch))),
         ps=tuple(a.p), ks=tuple(a.k), out_json=a.out,
-        shards=tuple(sorted(set(a.shards))))
+        shards=tuple(sorted(set(a.shards))),
+        probe_backends=tuple(dict.fromkeys(a.probe_backend)))

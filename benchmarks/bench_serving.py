@@ -63,17 +63,22 @@ BENCH_JSON = os.path.join(_ROOT, "BENCH_engine.json")
 REPEATS = 3  # best-of; host timing at sub-ms/step is noisy
 
 
-def _engine_for(mode: str, db, p: int, S: int):
+def _engine_for(mode: str, db, p: int, S: int, probe_backend: str):
     """The cell's engine: amih at S=1, sharded_amih otherwise; the
-    pipelined variant turns on the matching repro.pipeline path."""
+    pipelined variant turns on the matching repro.pipeline path. On the
+    device probing walk both pipeline knobs are stand-downs (no host
+    loop to overlap or fork for), so pipelined device cells measure the
+    gates doing their job."""
     if S == 1:
         return make_engine(
             "amih", db, p, query_cache_size=0,
             overlap_verify=(mode == "pipelined"),
+            probe_backend=probe_backend,
         )
     return make_engine(
         "sharded_amih", db, p, num_shards=S,
         probe_workers=(S if mode == "pipelined" else None),
+        probe_backend=probe_backend,
     )
 
 
@@ -89,7 +94,8 @@ def _drain(engine, qs, k: int, batch: int):
 
 def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
         batches=(1, 32), shards=(1, 8), out_json: str | None = None,
-        sizes=None, csv_name: str = "serving.csv"):
+        sizes=None, csv_name: str = "serving.csv",
+        probe_backends=("host", "device")):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 100_000))
     if sizes is None:
         sizes = [n for n in (10_000, 100_000, 1_000_000) if n <= max_n]
@@ -104,8 +110,10 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                 if S > n:
                     continue
                 seq_ms = {}
-                for mode in ("sequential", "pipelined"):
-                    engine = _engine_for(mode, db, p, S)
+                cells = [(pb, mode) for pb in probe_backends
+                         for mode in ("sequential", "pipelined")]
+                for pb, mode in cells:
+                    engine = _engine_for(mode, db, p, S, pb)
                     plan = getattr(engine, "plan", None)
                     n_dev = (
                         len({str(d) for d in plan.devices})
@@ -118,8 +126,10 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                             if t < best_t:
                                 best_t, best_lats = t, lats
                         ms_q = 1e3 * best_t / nq
+                        # the device walk stands every pipeline knob
+                        # down: nothing host-side left to overlap/fork
                         active = bool(
-                            mode == "pipelined" and (
+                            mode == "pipelined" and pb == "host" and (
                                 S == 1 or engine._use_parallel(batch)
                             )
                         )
@@ -131,6 +141,7 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                             "backend": "amih" if S == 1 else "sharded_amih",
                             "mode": mode, "p": p, "n": n, "K": k,
                             "batch": batch, "shards": S, "queries": nq,
+                            "probe_backend": pb,
                             "parallel_active": active,
                             "devices": n_dev,
                             "pool": (
@@ -149,10 +160,10 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                             "speedup_vs_sequential": "",
                         }
                         if mode == "sequential":
-                            seq_ms[batch] = ms_q
+                            seq_ms[pb, batch] = ms_q
                         else:
                             row["speedup_vs_sequential"] = round(
-                                seq_ms[batch] / max(ms_q, 1e-9), 3
+                                seq_ms[pb, batch] / max(ms_q, 1e-9), 3
                             )
                         rows.append(row)
                         extra = (
@@ -161,7 +172,7 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                         )
                         print(
                             f"p={p} n={n:>9} S={S:>2} B={batch:>3} "
-                            f"{row['backend']:>13}/{mode:<10} "
+                            f"{row['backend']:>13}[{pb}]/{mode:<10} "
                             f"{ms_q:7.3f} ms/q  p50={row['p50_ms']:.2f} "
                             f"p99={row['p99_ms']:.2f}{extra}"
                         )
@@ -172,6 +183,7 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
         "workload": {
             "sizes": sizes, "ps": list(ps), "k": k,
             "batches": list(batches), "shards": list(shards),
+            "probe_backends": list(probe_backends),
             "queries": nq,
             "codes": "synthetic clustered (AQBC-like)",
         },
@@ -206,6 +218,10 @@ def _parse_args(argv=None):
     ap.add_argument("--nq", type=int, default=64, help="queries per cell")
     ap.add_argument("--p", type=int, nargs="+", default=[64])
     ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--probe-backend", type=str, nargs="+",
+                    default=["host", "device"],
+                    choices=["host", "device"],
+                    help="probing walks to time (axis of the sweep)")
     ap.add_argument("--out", type=str, default=None,
                     help="write a standalone JSON payload here instead of "
                          "merging into BENCH_engine.json (bench_check)")
@@ -216,4 +232,5 @@ if __name__ == "__main__":
     a = _parse_args()
     run(max_n=a.max_n, nq=a.nq, ps=tuple(a.p), k=a.k,
         batches=tuple(sorted(set(a.batch))),
-        shards=tuple(sorted(set(a.shards))), out_json=a.out)
+        shards=tuple(sorted(set(a.shards))), out_json=a.out,
+        probe_backends=tuple(dict.fromkeys(a.probe_backend)))

@@ -45,12 +45,14 @@ _GATED_BACKENDS = ("amih", "sharded_amih", "sharded_scan")
 
 
 def _cells(payload, batches, max_n, shards):
-    """(backend, p, n, K, batch, shards) -> (ms_per_query, config) for
-    every gated cell. Sharded rows ride the max batch size regardless of
-    --batch; pre-shard baselines carry shards=1 implicitly. ``config``
-    is the cell's placement fingerprint (distinct devices the shards
-    landed on) — rows written before placement existed carry None and
-    compare against anything."""
+    """(backend, p, n, K, batch, shards, probe_backend) ->
+    (ms_per_query, config) for every gated cell. Sharded rows ride the
+    max batch size regardless of --batch; pre-shard baselines carry
+    shards=1 implicitly, and rows written before the probe_backend axis
+    existed gate as "host" (the only walk back then). ``config`` is the
+    cell's placement fingerprint (distinct devices the shards landed
+    on) — rows written before placement existed carry None and compare
+    against anything."""
     out = {}
     for row in payload["rows"]:
         if row["backend"] not in _GATED_BACKENDS:
@@ -63,14 +65,15 @@ def _cells(payload, batches, max_n, shards):
         elif row["batch"] not in batches or row["n"] > max_n:
             continue
         key = (row["backend"], row["p"], row["n"], row["K"],
-               row["batch"], n_shards)
+               row["batch"], n_shards, row.get("probe_backend", "host"))
         out[key] = (float(row["ms_per_query"]), row.get("devices"))
     return out
 
 
 def _serving_cells(section, max_n):
-    """(backend, mode, p, n, K, batch, shards) -> (ms_per_query, config)
-    for the serving-bench cells (see benchmarks/bench_serving.py).
+    """(backend, mode, p, n, K, batch, shards, probe_backend) ->
+    (ms_per_query, config) for the serving-bench cells (see
+    benchmarks/bench_serving.py); pre-device-walk rows gate as "host".
     ``config`` fingerprints the cell's execution shape — probe-pool
     flavor and placement-device count — so a persistent-pool cell is
     never gated against a per-call-fork or differently-placed baseline;
@@ -80,7 +83,8 @@ def _serving_cells(section, max_n):
         if row["n"] > max_n:
             continue
         key = (row["backend"], row["mode"], row["p"], row["n"],
-               row["K"], row["batch"], row["shards"])
+               row["K"], row["batch"], row["shards"],
+               row.get("probe_backend", "host"))
         cfg = (
             (row.get("pool", ""), row.get("devices"))
             if ("pool" in row or "devices" in row) else None
@@ -128,6 +132,9 @@ def check_serving(baseline, max_n, threshold) -> int:
                 ps=tuple(ps), k=wl["k"], sizes=sorted(sizes),
                 batches=tuple(batches), shards=tuple(shards),
                 out_json=path, csv_name="serving_check.csv",
+                probe_backends=tuple(
+                    wl.get("probe_backends", ["host"])
+                ),
             )
             with open(path) as f:
                 return _serving_cells(json.load(f), serving_max_n)
@@ -168,11 +175,11 @@ def check_serving(baseline, max_n, threshold) -> int:
                 fresh_ms[cell] = min(fresh_ms[cell], ms)
         failures = regressed()
     for cell in shared:
-        backend, mode, p, n, K, batch, n_shards = cell
+        backend, mode, p, n, K, batch, n_shards, pb = cell
         ratio = fresh_ms[cell] / max(base_ms[cell], 1e-9)
         status = "FAIL" if cell in failures else "ok"
-        print(f"  [{status}] {backend:>13}/{mode:<10} p={p} n={n:>9} "
-              f"K={K:>3} B={batch:>3} S={n_shards:>2} "
+        print(f"  [{status}] {backend:>13}[{pb}]/{mode:<10} p={p} "
+              f"n={n:>9} K={K:>3} B={batch:>3} S={n_shards:>2} "
               f"baseline={base_ms[cell]:.3f} "
               f"fresh={fresh_ms[cell]:.3f} ms/q ({ratio:.2f}x)")
     if failures:
@@ -233,6 +240,9 @@ def main(argv=None) -> int:
                 sizes=sizes,
                 csv_name="amih_vs_scan_check.csv",
                 shards=tuple(sorted(shards)),
+                probe_backends=tuple(
+                    wl.get("probe_backends", ["host"])
+                ),
             )
             with open(fresh_path) as f:
                 return _cells(
@@ -283,9 +293,9 @@ def main(argv=None) -> int:
     for cell in shared:
         ratio = fresh_ms[cell] / max(base_ms[cell], 1e-9)
         status = "FAIL" if cell in failures else "ok"
-        backend, p, n, K, batch, n_shards = cell
-        print(f"  [{status}] {backend:>13} p={p} n={n:>9} K={K:>3} "
-              f"B={batch:>3} S={n_shards:>2} "
+        backend, p, n, K, batch, n_shards, pb = cell
+        print(f"  [{status}] {backend:>13}[{pb}] p={p} n={n:>9} "
+              f"K={K:>3} B={batch:>3} S={n_shards:>2} "
               f"baseline={base_ms[cell]:.3f} fresh={fresh_ms[cell]:.3f} "
               f"ms/q ({ratio:.2f}x)")
     if failures:

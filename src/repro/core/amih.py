@@ -62,7 +62,7 @@ from .packing import (
     popcount,
     substring_spans,
 )
-from .probing import probing_sequence
+from .probing import shared_probing_iter
 from .tuples import rhat, sim_value
 
 __all__ = ["AMIHIndex", "AMIHStats", "default_num_tables"]
@@ -180,6 +180,18 @@ class AMIHIndex:
     # launch per z-group and tuple step — native on TPU, interpret-mode
     # elsewhere). Both are exact.
     verify_backend: str = "numpy"
+    # Probing backend: "host" walks the tuple sequence in the Python
+    # group loop below; "device" compiles the whole walk — probe-step
+    # enumeration, CSR bucket lookup, candidate dedup, grouped
+    # verification, and Prop. 2 early termination — into ONE jitted
+    # launch per z-group (see core/probe_device.py and
+    # kernels/device_probe.py). Both are exact and bit-identical.
+    probe_backend: str = "host"
+    # Device-path schedule bound: max precomputed probe-stream entries
+    # per (p, z). Walks that would exceed it are truncated and finish
+    # through the fused scan fallback (the device analogue of the host
+    # enumeration-cap guard).
+    probe_stream_cap: int = 1 << 16
     # Grouped verification dispatches so far (one per (z-group, tuple-step)
     # with fresh candidates, unless a step exceeds verify_elem_budget and
     # is chunked). Benchmarks/tests assert launch economy through this.
@@ -189,17 +201,15 @@ class AMIHIndex:
     # block is the whole DB) are split across launches instead of
     # materializing an unbounded (B_g, C_max, W) buffer.
     verify_elem_budget: int = 1 << 24
-    # Materialized probing-sequence prefixes keyed by query popcount z:
-    # the heap + exact-rational tuple ordering is query-independent given
-    # (p, z), so it is enumerated once per z across all queries and
-    # batches. Total memory is bounded by (z+1)(p-z+1) tuples per z.
-    _probing_cache: Dict[int, Tuple[List[Tuple[int, int]], Iterator]] = field(
-        default_factory=dict, repr=False, compare=False
-    )
     # Device-resident copy of db_words: uploaded once (eagerly at build for
     # verify_backend="pallas", lazily otherwise) so grouped verification
     # gathers candidate rows on device instead of re-shipping them per call.
     _db_dev: Optional[object] = field(
+        default=None, repr=False, compare=False
+    )
+    # Device-resident CSR bucket layout (offsets + sorted ids + padded
+    # codes), built next to db_dev for probe_backend="device".
+    _device_csr: Optional[dict] = field(
         default=None, repr=False, compare=False
     )
 
@@ -213,9 +223,13 @@ class AMIHIndex:
         verify_backend: str = "numpy",
         id_offset: int = 0,
         device: Optional[object] = None,
+        probe_backend: str = "host",
+        probe_stream_cap: int = 1 << 16,
     ) -> "AMIHIndex":
         if verify_backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
+        if probe_backend not in ("host", "device"):
+            raise ValueError(f"unknown probe_backend {probe_backend!r}")
         db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
         n = db_words.shape[0]
         if m is None:
@@ -240,10 +254,13 @@ class AMIHIndex:
         index = cls(
             p=p, m=m, db_words=db_words, tables=tables,
             verify_backend=verify_backend, id_offset=id_offset,
-            device=device,
+            device=device, probe_backend=probe_backend,
+            probe_stream_cap=probe_stream_cap,
         )
         if verify_backend == "pallas":
             index.db_dev  # upload once, at build time
+        if probe_backend == "device":
+            index.device_csr  # validate widths + upload once, at build
         return index
 
     @property
@@ -266,6 +283,17 @@ class AMIHIndex:
             else:
                 self._db_dev = jnp.asarray(self.db_words)
         return self._db_dev
+
+    @property
+    def device_csr(self) -> dict:
+        """Device-resident CSR bucket layout for the fused probing walk
+        (built and committed to ``device`` on first access; eagerly at
+        build for ``probe_backend="device"``)."""
+        if self._device_csr is None:
+            from .probe_device import build_device_csr
+
+            self._device_csr = build_device_csr(self)
+        return self._device_csr
 
     # ------------------------------------------------------------- search
     def knn(
@@ -411,7 +439,22 @@ class AMIHIndex:
         grouped-verify -> bucket -> emit pipeline. Returns every query's
         final state (out_ids/out_sims hold LOCAL row ids). With
         ``overlap`` (repro.pipeline.VerifyOverlap) each group's loop is
-        software-pipelined one tuple step deep instead."""
+        software-pipelined one tuple step deep instead.
+
+        With ``probe_backend="device"`` the whole group loop is replaced
+        by the fused device walk (one launch per z-group, plus at most
+        one scan-fallback launch): results and the early-termination
+        contract are identical, but ``enumeration_cap`` and ``overlap``
+        are no-ops there — the device path bounds work through
+        ``probe_stream_cap`` / the fused scan, and has no host loop left
+        to overlap."""
+        if self.probe_backend == "device":
+            from .probe_device import run_groups_device
+
+            return run_groups_device(
+                self, q_words, k, stats,
+                stop_below=stop_below, on_done=on_done,
+            )
         B = q_words.shape[0]
         zs = popcount(q_words)
         groups: Dict[int, List[int]] = {}
@@ -519,23 +562,11 @@ class AMIHIndex:
                     s.done = True
 
     def _probing_iter(self, z: int) -> Iterator[Tuple[int, int]]:
-        """Probing sequence for popcount z, served from the per-index
-        cache: already-materialized tuples replay from the prefix list;
-        going deeper pulls the underlying generator and extends it."""
-        entry = self._probing_cache.get(z)
-        if entry is None:
-            entry = ([], probing_sequence(self.p, z))
-            self._probing_cache[z] = entry
-        prefix, gen = entry
-        i = 0
-        while True:
-            if i >= len(prefix):
-                try:
-                    prefix.append(next(gen))
-                except StopIteration:
-                    return
-            yield prefix[i]
-            i += 1
+        """Probing sequence for popcount z, served from the MODULE-level
+        shared cache (repro.core.probing): the heap + exact-rational tuple
+        ordering depends only on (p, z), so one materialized prefix serves
+        every index, shard, and batch in the process."""
+        return shared_probing_iter(self.p, z)
 
     def _make_state(
         self,

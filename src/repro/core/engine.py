@@ -203,17 +203,19 @@ def make_engine(
                           ``enumeration_cap``.
       - "amih"          — angular multi-index hashing (paper §5).
                           ``m``, ``verify_backend`` ("numpy" | "pallas"),
-                          ``enumeration_cap``, ``query_cache_size``,
-                          ``overlap_verify``.
+                          ``probe_backend`` ("host" | "device" — the
+                          fused one-launch-per-z-group probing walk),
+                          ``probe_stream_cap``, ``enumeration_cap``,
+                          ``query_cache_size``, ``overlap_verify``.
       - "sharded_scan"  — row-sharded exhaustive scan (repro.shard).
                           ``mesh`` | ``num_shards`` | ``plan``,
                           ``shard_axes``, ``devices``, ``chunk``.
       - "sharded_amih"  — one shard-local AMIH index per slice, each
                           placed on its own device.
                           sharding knobs as above plus ``m``,
-                          ``verify_backend``, ``enumeration_cap``,
-                          ``probe_workers``, ``probe_mode``,
-                          ``prime_bound``.
+                          ``verify_backend``, ``probe_backend``,
+                          ``enumeration_cap``, ``probe_workers``,
+                          ``probe_mode``, ``prime_bound``.
 
     Every backend answers the same batched ``knn_batch(q_words, k)`` and
     returns results bit-identical to ``linear_scan_knn`` (up to ties
@@ -515,6 +517,8 @@ class AMIHEngine(SearchEngine):
         enumeration_cap: Optional[int] = None,
         query_cache_size: int = 256,
         overlap_verify: bool = False,
+        probe_backend: str = "host",
+        probe_stream_cap: int = 1 << 16,
         **cfg: Any,
     ) -> "AMIHEngine":
         if cfg:
@@ -523,7 +527,9 @@ class AMIHEngine(SearchEngine):
         if enumeration_cap is None:
             enumeration_cap = max(8 * n, 1 << 14)
         index = AMIHIndex.build(
-            db_words, p, m=m, verify_backend=verify_backend
+            db_words, p, m=m, verify_backend=verify_backend,
+            probe_backend=probe_backend,
+            probe_stream_cap=probe_stream_cap,
         )
         return cls(index, enumeration_cap, query_cache_size, overlap_verify)
 

@@ -14,14 +14,16 @@ safety ``cap`` is enforced and surfaced to the caller.
 from __future__ import annotations
 
 import math
+import threading
 from itertools import combinations
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 __all__ = [
     "EnumerationCapExceeded",
     "bit_positions",
+    "combination_indices",
     "combination_masks",
     "tuple_bucket_values",
 ]
@@ -39,17 +41,49 @@ def bit_positions(value: int, width: int) -> List[int]:
     return [j for j in range(width) if (value >> j) & 1]
 
 
-def combination_masks(positions: List[int], k: int) -> np.ndarray:
-    """All C(len(positions), k) OR-masks of k distinct positions, uint64."""
-    n = len(positions)
-    cnt = math.comb(n, k)
-    out = np.empty(cnt, dtype=np.uint64)
-    for i, combo in enumerate(combinations(positions, k)):
-        m = 0
-        for pos in combo:
-            m |= 1 << pos
-        out[i] = m
+# Canonical k-out-of-n index combinations, cached process-wide: both the
+# host bucket enumeration and the device probe schedule expand the same
+# C(n, k) tables (in itertools.combinations order), so they are built once
+# and shared. Entries are tiny (C(16, 4) = 1820 rows of k int8s) and the
+# (n, k) key space is small; no eviction needed.
+_COMBO_CACHE: Dict[Tuple[int, int], np.ndarray] = {}
+_COMBO_LOCK = threading.Lock()
+
+
+def combination_indices(n: int, k: int) -> np.ndarray:
+    """All C(n, k) combinations of k indices out of range(n), as a
+    (C(n, k), max(k, 1)) int8 array in ``itertools.combinations`` order
+    (k == 0 yields one all-padding row). Cached; treat as read-only."""
+    with _COMBO_LOCK:
+        out = _COMBO_CACHE.get((n, k))
+        if out is None:
+            cnt = math.comb(n, k)
+            out = np.fromiter(
+                (j for combo in combinations(range(n), k) for j in combo),
+                dtype=np.int8,
+                count=cnt * k,
+            ).reshape(cnt, k) if k else np.zeros((1, 1), dtype=np.int8)
+            out.setflags(write=False)
+            _COMBO_CACHE[(n, k)] = out
     return out
+
+
+def combination_masks(positions: List[int], k: int) -> np.ndarray:
+    """All C(len(positions), k) OR-masks of k distinct positions, uint64.
+
+    Vectorized through the shared ``combination_indices`` table: the
+    canonical index rows gather per-position bit values and OR-reduce,
+    replacing the old per-combination Python loop on the probe hot path."""
+    n = len(positions)
+    if k == 0:
+        return np.zeros(1, dtype=np.uint64)
+    if k > n:
+        return np.empty(0, dtype=np.uint64)
+    pos_bits = np.array(
+        [1 << int(pos) for pos in positions], dtype=np.uint64
+    )
+    idx = combination_indices(n, k)
+    return np.bitwise_or.reduce(pos_bits[idx.astype(np.intp)], axis=1)
 
 
 def tuple_bucket_values(

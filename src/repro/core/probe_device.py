@@ -1,0 +1,575 @@
+"""Device-resident AMIH probing (the ``probe_backend="device"`` path).
+
+The host probing loop in ``amih.py`` walks the (p, z) tuple sequence one
+step at a time: enumerate substring probes, look buckets up in host CSR
+tables, verify fresh candidates, emit. Every step is a host round-trip.
+This module compiles the whole walk into ONE jitted launch per z-group:
+
+1.  **Schedule** (``DeviceSchedule``): the probing sequence depends only
+    on (p, z) — not the query — so the entire walk is precomputed as flat
+    device arrays. Each *stream entry* is one bucket probe: a table id,
+    the walk step it belongs to, and the index combination that flips
+    ``a`` one-bits and ``b`` zero-bits of the query substring (Prop. 4's
+    T_{r1,r2,m} cover, deduplicated across steps by the same staircase
+    the host path uses). The combination is stored as canonical indices
+    into the query's *sorted* bit positions (ones first, then zeros), so
+    one schedule serves every query: per-query validity is just
+    ``max_index < z_s`` (resp. ``< w_s - z_s``) and the probed set per
+    query is exactly the host path's.
+
+2.  **CSR** (``build_device_csr``): each ``_SubTable``'s buckets become a
+    dense offsets table (``offsets[s, v] .. offsets[s, v + 1]`` bounds
+    bucket ``v`` of table ``s``) plus one shared sorted-ids matrix,
+    committed next to ``AMIHIndex.db_dev`` — bucket lookup on device is
+    two gathers.
+
+3.  **Walk kernel** (``kernels/device_probe.py``): a ``lax.while_loop``
+    consumes the stream in tiles, expands bucket ranges into candidate
+    slots (at most ``cap`` per query per iteration — oversized buckets
+    are resumed across iterations), gathers + popcount-verifies the
+    candidates (Pallas kernel on TPU, XLA reference elsewhere), and
+    scatter-mins each candidate's exact walk position into a per-query
+    position map. Dedup is free: rediscovering a candidate scatters the
+    same position. Early termination is the paper's Prop. 2 bound in
+    walk-position space: a query is done when at least k codes have
+    position <= the last *completed* step (pigeonhole: those are final)
+    or the walk has passed its ``stop_below`` position.
+
+4.  **Extraction** (host): the final top-K of query ``qi`` is the k
+    smallest (position, id) pairs of its position map; sims are read from
+    the host float64 ``sims64`` table at those positions, so emitted sims
+    never round-trip through float32 and results are bit-identical to the
+    host path and ``linear_scan_knn`` (including in-tuple ties: ascending
+    id within a position, walk order across positions).
+
+If the schedule could not be fully built (a probe needs more than
+``KMAX`` flips, or the stream would exceed ``stream_cap`` entries — the
+device analogue of the host enumeration-cap guard), queries still not
+done when the walk exhausts the stream fall back to ONE full-scan verify
+launch (every code's exact position), keeping the launch count O(1) per
+z-group in every case.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .enumeration import combination_indices
+from .packing import extract_substring, popcount, substring_spans
+from .probing import probing_prefix
+from .tuples import rhat, sim_value
+
+__all__ = [
+    "DEFAULT_PROBE_CAP",
+    "DEFAULT_STREAM_CAP",
+    "DeviceSchedule",
+    "KMAX",
+    "MAX_OFFSET_WIDTH",
+    "POS_INF",
+    "build_device_csr",
+    "get_schedule",
+    "run_groups_device",
+    "schedule_cache_clear",
+    "schedule_cache_info",
+]
+
+# Max flips per substring probe the schedule encodes (index columns per
+# side). Probes needing more truncate the schedule -> scan fallback; with
+# the paper's m ~ p/log2(n) splits, rsub = floor(r/m) stays tiny and real
+# walks never get near this.
+KMAX = 8
+
+# "Never probed" sentinel in the per-query position map (int32 max).
+POS_INF = np.int32(0x7FFFFFFF)
+
+# Dense CSR offsets spend 4 * (2^w + 1) bytes per table; w <= 20 caps
+# that at ~4 MiB/table. Wider substrings should raise m instead.
+MAX_OFFSET_WIDTH = 20
+
+# Stream entries consumed per while_loop iteration (also the schedule's
+# pad margin, so a tile slice never needs clamping).
+DEFAULT_TILE = 1024
+
+# Candidate slots expanded per query per iteration: the walk kernel's
+# peak gather is (B_pad, cap, W) words.
+DEFAULT_PROBE_CAP = 2048
+
+# Default bound on schedule stream entries per (p, z); the `AMIHIndex`
+# field ``probe_stream_cap`` overrides it per index.
+DEFAULT_STREAM_CAP = 1 << 16
+
+# Done-check cadence inside the while_loop. A check scans the (B, n_pad)
+# position map, but most walks finish within their first tile — checking
+# every iteration lets them exit immediately, which beats amortizing the
+# scan over iterations the query never needed.
+DEFAULT_CHECK_EVERY = 1
+
+_EMPTY_I64 = np.empty(0, dtype=np.int64)
+
+
+@dataclass
+class DeviceSchedule:
+    """Precomputed device walk for one (p, m, widths, z, stream_cap).
+
+    Host-side metadata (numpy) plus per-device committed jnp bundles
+    (``device_arrays``). Instances are shared process-wide through
+    ``get_schedule`` — treat every array as read-only.
+    """
+
+    p: int
+    m: int
+    widths: Tuple[int, ...]
+    z: int
+    stream_cap: int
+    # ---- full walk metadata (all L valid tuples, in walk order)
+    L: int = 0
+    r1s: np.ndarray = field(default=None, repr=False)      # (L,) int32
+    r2s: np.ndarray = field(default=None, repr=False)      # (L,) int32
+    sims64: np.ndarray = field(default=None, repr=False)   # (L,) float64
+    cum_maxrad: np.ndarray = field(default=None, repr=False)  # (L,) int32
+    inv_pos: np.ndarray = field(default=None, repr=False)  # ((p+1)^2,) int32
+    # ---- probe stream (built_steps walk steps flattened; padded to P)
+    s_len: int = 0          # real stream entries
+    built_steps: int = 0    # walk steps fully encoded in the stream
+    complete: bool = False  # built_steps == L
+    tbl: np.ndarray = field(default=None, repr=False)      # (P,) int32
+    step_ext: np.ndarray = field(default=None, repr=False)  # (P+1,) int32
+    idx1: np.ndarray = field(default=None, repr=False)     # (P, KMAX) int32
+    idx0: np.ndarray = field(default=None, repr=False)     # (P, KMAX) int32
+    maxi1: np.ndarray = field(default=None, repr=False)    # (P,) int32
+    maxi0: np.ndarray = field(default=None, repr=False)    # (P,) int32
+    cum_subtuples: np.ndarray = field(default=None, repr=False)
+    _dev: Dict[str, dict] = field(default_factory=dict, repr=False)
+
+    def device_arrays(self, device) -> dict:
+        """The committed jnp bundle of the walk arrays for ``device``
+        (built on first use per device, cached on the schedule)."""
+        from ..kernels import ops
+
+        key = ops.device_key(device)
+        bundle = self._dev.get(key)
+        if bundle is None:
+            import jax
+            import jax.numpy as jnp
+
+            put = (
+                (lambda a: jax.device_put(a, device))
+                if device is not None
+                else jnp.asarray
+            )
+            bundle = {
+                "tbl": put(self.tbl),
+                "step_ext": put(self.step_ext),
+                "idx1": put(self.idx1),
+                "idx0": put(self.idx0),
+                "maxi1": put(self.maxi1),
+                "maxi0": put(self.maxi0),
+                "inv_pos": put(self.inv_pos),
+                "widths": put(np.asarray(self.widths, dtype=np.int32)),
+            }
+            self._dev[key] = bundle
+        return bundle
+
+
+def _build_schedule(
+    p: int, m: int, widths: Tuple[int, ...], z: int, stream_cap: int
+) -> DeviceSchedule:
+    from ..kernels import ops
+
+    sched = DeviceSchedule(p=p, m=m, widths=widths, z=z,
+                           stream_cap=stream_cap)
+    L = (z + 1) * (p - z + 1)
+    walk = probing_prefix(p, z, L)
+    assert len(walk) == L, "probing sequence shorter than tuple count"
+    r1s = np.fromiter((t[0] for t in walk), dtype=np.int32, count=L)
+    r2s = np.fromiter((t[1] for t in walk), dtype=np.int32, count=L)
+    sched.L = L
+    sched.r1s, sched.r2s = r1s, r2s
+    sched.sims64 = np.fromiter(
+        (sim_value(p, z, r1, r2) for (r1, r2) in walk),
+        dtype=np.float64, count=L,
+    )
+    sched.cum_maxrad = np.maximum.accumulate(r1s + r2s).astype(np.int32)
+    inv_pos = np.full((p + 1) * (p + 1), POS_INF, dtype=np.int32)
+    inv_pos[r1s.astype(np.int64) * (p + 1) + r2s] = np.arange(
+        L, dtype=np.int32
+    )
+    sched.inv_pos = inv_pos
+
+    wmax = max(widths)
+    cover: List[Dict[int, int]] = [{} for _ in range(m)]
+    tbl_l: List[np.ndarray] = []
+    step_l: List[np.ndarray] = []
+    idx1_l: List[np.ndarray] = []
+    idx0_l: List[np.ndarray] = []
+    maxi1_l: List[np.ndarray] = []
+    maxi0_l: List[np.ndarray] = []
+    probe_counts: List[int] = []
+    total = 0
+    built = 0
+    complete = False
+    for t, (r1, r2) in enumerate(walk):
+        rsub = (r1 + r2) // m
+        # collect this step's new probes WITHOUT committing the cover:
+        # a step is all-or-nothing, so an abort leaves the stream ending
+        # exactly at a completed step boundary
+        new_probes: List[Tuple[int, int, int]] = []
+        cnt = 0
+        abort = False
+        for s in range(m):
+            w = widths[s]
+            cov = cover[s]
+            for a in range(min(r1, w, rsub) + 1):
+                bmax = min(r2, w, rsub - a)
+                for b in range(cov.get(a, -1) + 1, bmax + 1):
+                    if a > KMAX or b > KMAX:
+                        abort = True
+                        break
+                    cnt += math.comb(w, a) * math.comb(w, b)
+                    new_probes.append((s, a, b))
+                if abort:
+                    break
+            if abort:
+                break
+        if abort or total + cnt > stream_cap:
+            break
+        for (s, a, b) in new_probes:
+            cov = cover[s]
+            cov[a] = max(cov.get(a, -1), b)
+            w = widths[s]
+            c1 = combination_indices(w, a)
+            c0 = combination_indices(w, b)
+            C1, C0 = len(c1), len(c0)
+            i1 = np.full((C1, KMAX), wmax, dtype=np.int32)
+            if a:
+                i1[:, :a] = c1
+            i0 = np.full((C0, KMAX), wmax, dtype=np.int32)
+            if b:
+                i0[:, :b] = c0
+            m1 = (
+                c1[:, -1].astype(np.int32)
+                if a else np.full(C1, -1, dtype=np.int32)
+            )
+            m0 = (
+                c0[:, -1].astype(np.int32)
+                if b else np.full(C0, -1, dtype=np.int32)
+            )
+            e = C1 * C0
+            tbl_l.append(np.full(e, s, dtype=np.int32))
+            step_l.append(np.full(e, t, dtype=np.int32))
+            idx1_l.append(np.repeat(i1, C0, axis=0))
+            idx0_l.append(np.tile(i0, (C1, 1)))
+            maxi1_l.append(np.repeat(m1, C0))
+            maxi0_l.append(np.tile(m0, C1))
+        total += cnt
+        probe_counts.append(len(new_probes))
+        built = t + 1
+    else:
+        complete = True
+
+    s_len = total
+    P = ops.pad_bucket(s_len + DEFAULT_TILE, minimum=DEFAULT_TILE)
+
+    def cat(parts, pad_shape, pad_val):
+        out = np.full(pad_shape, pad_val, dtype=np.int32)
+        if parts:
+            body = np.concatenate(parts, axis=0)
+            out[: len(body)] = body
+        return out
+
+    sched.s_len = s_len
+    sched.built_steps = built
+    sched.complete = complete
+    sched.tbl = cat(tbl_l, (P,), 0)
+    steps = cat(step_l, (P + 1,), built)
+    sched.step_ext = steps
+    sched.idx1 = cat(idx1_l, (P, KMAX), wmax)
+    sched.idx0 = cat(idx0_l, (P, KMAX), wmax)
+    # padded entries carry an impossible max index so they can never be
+    # valid for any query (belt and braces next to the in-stream mask)
+    sched.maxi1 = cat(maxi1_l, (P,), 1 << 30)
+    sched.maxi0 = cat(maxi0_l, (P,), 1 << 30)
+    sched.cum_subtuples = np.concatenate(
+        ([0], np.cumsum(probe_counts, dtype=np.int64))
+    )
+    return sched
+
+
+_SCHED_CACHE: "OrderedDict[tuple, DeviceSchedule]" = OrderedDict()
+_SCHED_CACHE_MAX = 32
+_SCHED_LOCK = threading.RLock()
+
+
+def get_schedule(
+    p: int, m: int, widths: Tuple[int, ...], z: int, stream_cap: int
+) -> DeviceSchedule:
+    """Process-wide LRU of device walk schedules — like the probing-prefix
+    cache, one (p, m, widths, z) schedule serves every index and shard."""
+    key = (p, m, tuple(widths), z, stream_cap)
+    with _SCHED_LOCK:
+        sched = _SCHED_CACHE.get(key)
+        if sched is not None:
+            _SCHED_CACHE.move_to_end(key)
+            return sched
+    built = _build_schedule(p, m, tuple(widths), z, stream_cap)
+    with _SCHED_LOCK:
+        sched = _SCHED_CACHE.setdefault(key, built)
+        _SCHED_CACHE.move_to_end(key)
+        while len(_SCHED_CACHE) > _SCHED_CACHE_MAX:
+            _SCHED_CACHE.popitem(last=False)
+        return sched
+
+
+def schedule_cache_clear() -> None:
+    with _SCHED_LOCK:
+        _SCHED_CACHE.clear()
+
+
+def schedule_cache_info() -> Tuple[int, int]:
+    """(entries, total stream entries) of the schedule cache."""
+    with _SCHED_LOCK:
+        return (
+            len(_SCHED_CACHE),
+            sum(s.s_len for s in _SCHED_CACHE.values()),
+        )
+
+
+# ------------------------------------------------------------------- CSR
+def build_device_csr(index) -> dict:
+    """Device-resident CSR of every ``_SubTable``, committed to
+    ``index.device`` next to ``db_dev``.
+
+    ``offsets`` is dense over bucket values — (m, 2^wmax + 1) int32, so a
+    bucket lookup is two gathers with no per-table searchsorted on device;
+    ``ids`` is the per-table sorted id rows padded to ``n_pad`` with the
+    out-of-bounds marker ``n_pad`` (dropped by the position scatter);
+    ``db_pad`` zero-pads the packed codes to ``n_pad`` rows for static
+    gather shapes.
+    """
+    from ..kernels import ops
+
+    widths = [t.width for t in index.tables]
+    wmax = max(widths)
+    if wmax > MAX_OFFSET_WIDTH:
+        raise ValueError(
+            f"probe_backend='device' needs substring width <= "
+            f"{MAX_OFFSET_WIDTH} bits for the dense CSR offsets "
+            f"(got {wmax}); build with larger m (>= "
+            f"{-(-index.p // MAX_OFFSET_WIDTH)} for p={index.p})"
+        )
+    n = index.n
+    n_pad = ops.pad_bucket(n, minimum=8)
+    m = index.m
+    offsets = np.full((m, (1 << wmax) + 1), n, dtype=np.int32)
+    ids = np.full((m, n_pad), n_pad, dtype=np.int32)
+    for s, table in enumerate(index.tables):
+        w = table.width
+        offsets[s, : (1 << w) + 1] = np.searchsorted(
+            table.sorted_vals, np.arange((1 << w) + 1), side="left"
+        ).astype(np.int32)
+        ids[s, :n] = table.sorted_ids
+    db_pad = np.zeros((n_pad, index.db_words.shape[1]),
+                      dtype=index.db_words.dtype)
+    db_pad[:n] = index.db_words
+
+    import jax
+    import jax.numpy as jnp
+
+    put = (
+        (lambda a: jax.device_put(a, index.device))
+        if index.device is not None
+        else jnp.asarray
+    )
+    return {
+        "offsets": put(offsets),
+        "ids": put(ids),
+        "db_pad": put(db_pad),
+        "n": n,
+        "n_pad": n_pad,
+        "wmax": wmax,
+        "widths": tuple(widths),
+    }
+
+
+def _pow_arrays(
+    q_sub: np.ndarray, z_sub: np.ndarray, widths: Tuple[int, ...], wmax: int
+):
+    """Per-query flip values for the canonical index combinations.
+
+    ``pow1[b, s, i]`` is the bit value of the i-th one-position of query
+    b's substring s (ascending position; 0 for i >= z_s and for the KMAX
+    padding column i == wmax); ``pow0`` likewise over zero-positions. The
+    schedule's index combinations OR these into the XOR mask, so each
+    valid stream entry reproduces exactly one host bucket value.
+    """
+    Bg, m = q_sub.shape
+    pow1 = np.zeros((Bg, m, wmax + 1), dtype=np.int32)
+    pow0 = np.zeros((Bg, m, wmax + 1), dtype=np.int32)
+    for s in range(m):
+        w = widths[s]
+        bits = (q_sub[:, s, None] >> np.arange(w, dtype=np.uint32)) & 1
+        order1 = np.argsort(1 - bits, axis=1, kind="stable")
+        order0 = np.argsort(bits, axis=1, kind="stable")
+        col = np.arange(w)
+        z_s = z_sub[:, s : s + 1].astype(np.int64)
+        pow1[:, s, :w] = np.where(col < z_s, 1 << order1, 0)
+        pow0[:, s, :w] = np.where(col < (w - z_s), 1 << order0, 0)
+    return pow1, pow0
+
+
+# ---------------------------------------------------------------- driver
+def run_groups_device(
+    index,
+    q_words: np.ndarray,
+    k: int,
+    stats,
+    stop_below: Optional[np.ndarray] = None,
+    on_done=None,
+):
+    """Device-path replacement for ``AMIHIndex._run_groups``: one walk
+    launch (plus at most one scan-fallback launch) per z-group, then host
+    extraction. Returns finished ``_QueryState``s with the same result
+    contract as the host loop (LOCAL ids; float64 sims)."""
+    from .amih import _QueryState
+    from ..kernels import ops
+
+    B = q_words.shape[0]
+    zs = popcount(q_words)
+    groups: Dict[int, List[int]] = {}
+    for qi in range(B):
+        groups.setdefault(int(zs[qi]), []).append(qi)
+
+    csr = index.device_csr
+    widths = csr["widths"]
+    wmax = csr["wmax"]
+    n = csr["n"]
+    states: List[_QueryState] = []
+    for z, qis in groups.items():
+        sched = get_schedule(
+            index.p, index.m, widths, z, index.probe_stream_cap
+        )
+        Bg = len(qis)
+        q_grp = np.ascontiguousarray(q_words[qis])
+        q_sub = np.stack(
+            [
+                np.asarray(extract_substring(q_grp, t.lo, t.hi))
+                for t in index.tables
+            ],
+            axis=1,
+        ).astype(np.uint32)
+        z_sub = np.bitwise_count(q_sub).astype(np.int32)
+        pow1, pow0 = _pow_arrays(q_sub, z_sub, widths, wmax)
+        if stop_below is None:
+            t_stop = np.full(Bg, sched.L - 1, dtype=np.int32)
+        else:
+            # snapshot of the live bounds: bounds only ever rise, so a
+            # stale (lower) value is always still a valid lower bound
+            t_stop = (
+                np.searchsorted(
+                    -sched.sims64, -stop_below[qis], side="right"
+                )
+                - 1
+            ).astype(np.int32)
+
+        res = ops.device_probe_walk_launch(
+            q_grp,
+            q_sub.astype(np.int32),
+            z_sub,
+            pow1,
+            pow0,
+            t_stop,
+            k,
+            sched=sched,
+            csr=csr,
+            p=index.p,
+            device=index.device,
+        )
+        index.verify_launches += 1
+        posmap = res["posmap"]
+        done_dev = res["done"]
+        scanned = np.zeros(Bg, dtype=bool)
+        undone = np.flatnonzero(~done_dev)
+        if undone.size:
+            # truncated schedule: finish the stragglers with ONE
+            # exhaustive verify launch (the host enumeration-cap
+            # fallback, fused) — positions are exact, so results are
+            # unchanged, and the z-group total stays at two launches
+            pm2 = ops.device_probe_scan_launch(
+                q_grp[undone],
+                sched=sched,
+                csr=csr,
+                p=index.p,
+                device=index.device,
+            )
+            posmap = posmap.copy()  # the device-backed view is read-only
+            posmap[undone] = pm2
+            scanned[undone] = True
+            index.verify_launches += 1
+
+        r_hat = rhat(z)
+        for gi, qi in enumerate(qis):
+            pm = posmap[gi, :n]
+            ts = int(t_stop[gi])
+            # work on the found subset only: the full-width (n,) compare
+            # is one cheap pass, everything after is O(cnt log cnt)
+            idx = np.flatnonzero(pm <= ts)
+            cnt = idx.size
+            take = min(k, cnt)
+            if take > 0:
+                pos_f = pm[idx].astype(np.int64)
+                order = np.argsort(pos_f * n + idx)[:take]
+                out_ids = idx[order].astype(np.int64)
+                out_pos = pos_f[order]
+                out_sims = sched.sims64[out_pos]
+            else:
+                out_ids = _EMPTY_I64
+                out_pos = _EMPTY_I64
+                out_sims = np.empty(0, dtype=np.float64)
+            st = None if stats is None else stats[qi]
+            if st is not None:
+                st.probes += int(res["probes"][gi])
+                st.retrieved += int(res["retrieved"][gi])
+                st.verified += int((pm != POS_INF).sum())
+                t_last = int(out_pos[-1]) if take else -1
+                st.tuples_processed += t_last + 1
+                if t_last >= 0:
+                    st.max_radius = max(
+                        st.max_radius, int(sched.cum_maxrad[t_last])
+                    )
+                    if st.max_radius > r_hat:
+                        st.exceeded_rhat = True
+                    st.substring_tuples_probed += int(
+                        sched.cum_subtuples[
+                            min(t_last + 1, sched.built_steps)
+                        ]
+                    )
+                if scanned[gi]:
+                    st.fell_back_to_scan = True
+            state = _QueryState(
+                qi=qi,
+                q_words=q_words[qi],
+                q_subs=[],
+                z_subs=[],
+                seen=np.empty(0, dtype=bool),
+                cover=[],
+                pending={},
+                out_ids=out_ids,
+                out_sims=out_sims,
+                stats=st,
+                scanned=bool(scanned[gi]),
+                done=take >= k,
+            )
+            states.append(state)
+            if on_done is not None and state.done:
+                on_done(
+                    qi,
+                    out_ids + index.id_offset,
+                    np.asarray(out_sims, dtype=np.float64),
+                )
+    return states

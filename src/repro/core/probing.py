@@ -25,8 +25,10 @@ natural limit. Codes that are themselves the zero vector sort last.
 from __future__ import annotations
 
 import heapq
+import threading
+from collections import OrderedDict
 from fractions import Fraction
-from typing import Iterator, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 from .tuples import is_valid_tuple, rhat, sim_squared_fraction, sim_value
 
@@ -35,6 +37,10 @@ __all__ = [
     "closed_form_prefix",
     "first_anchor",
     "second_anchor",
+    "probing_prefix",
+    "shared_probing_iter",
+    "probing_cache_clear",
+    "probing_cache_info",
 ]
 
 
@@ -109,3 +115,97 @@ def probing_sequence_with_sims(p: int, z: int, limit: Optional[int] = None):
     return [
         (t, sim_value(p, z, *t)) for t in probing_sequence(p, z, limit=limit)
     ]
+
+
+# --------------------------------------------------------------- shared cache
+# The sequence depends only on (p, z) — not on the query, the index, or the
+# shard — so materialized prefixes are cached at MODULE level and shared by
+# every AMIHIndex in the process: a sharded engine with S shards enumerates
+# each (p, z) once instead of S times, and the device probe path reads its
+# walk arrays straight out of the same entries. The cache is a bounded LRU
+# (whole (p, z) entries are evicted, never truncated) and is thread-safe:
+# thread-mode shard probing extends entries concurrently.
+
+class _SeqEntry:
+    """One (p, z) entry: the materialized prefix plus the live generator
+    that extends it. ``prefix`` is append-only — index-based readers can
+    scan it without the lock; only extension takes ``_SEQ_LOCK``."""
+
+    __slots__ = ("prefix", "gen", "exhausted")
+
+    def __init__(self, p: int, z: int):
+        self.prefix: List[Tuple[int, int]] = []
+        self.gen = probing_sequence(p, z)
+        self.exhausted = False
+
+    def extend_to(self, count: int) -> None:
+        """Materialize at least ``count`` tuples (or until exhaustion).
+        Caller must hold ``_SEQ_LOCK``."""
+        while len(self.prefix) < count and not self.exhausted:
+            try:
+                self.prefix.append(next(self.gen))
+            except StopIteration:
+                self.exhausted = True
+
+
+_SEQ_CACHE: "OrderedDict[Tuple[int, int], _SeqEntry]" = OrderedDict()
+_SEQ_CACHE_MAX = 64
+_SEQ_LOCK = threading.RLock()
+
+
+def _seq_entry(p: int, z: int) -> _SeqEntry:
+    """The shared cache entry for (p, z) (LRU-touched; caller need not hold
+    the lock — entry internals are guarded separately)."""
+    with _SEQ_LOCK:
+        entry = _SEQ_CACHE.get((p, z))
+        if entry is None:
+            entry = _SeqEntry(p, z)
+            _SEQ_CACHE[(p, z)] = entry
+        else:
+            _SEQ_CACHE.move_to_end((p, z))
+        while len(_SEQ_CACHE) > _SEQ_CACHE_MAX:
+            _SEQ_CACHE.popitem(last=False)
+        return entry
+
+
+def probing_prefix(p: int, z: int, count: int) -> List[Tuple[int, int]]:
+    """The first ``count`` tuples of the (p, z) probing sequence (fewer if
+    the walk is shorter), materialized once process-wide. The returned
+    list is the live cache prefix — callers must treat it as read-only."""
+    entry = _seq_entry(p, z)
+    if len(entry.prefix) < count and not entry.exhausted:
+        with _SEQ_LOCK:
+            entry.extend_to(count)
+    return entry.prefix
+
+
+def shared_probing_iter(p: int, z: int) -> Iterator[Tuple[int, int]]:
+    """Iterator over the (p, z) sequence backed by the shared cache:
+    already-materialized tuples replay from the prefix list; going deeper
+    extends it (under the lock) for every future consumer."""
+    entry = _seq_entry(p, z)
+    prefix = entry.prefix
+    i = 0
+    while True:
+        if i >= len(prefix):
+            with _SEQ_LOCK:
+                entry.extend_to(i + 1)
+            if i >= len(prefix):
+                return
+        yield prefix[i]
+        i += 1
+
+
+def probing_cache_clear() -> None:
+    """Drop every cached sequence (benchmark seed loops; tests)."""
+    with _SEQ_LOCK:
+        _SEQ_CACHE.clear()
+
+
+def probing_cache_info() -> Tuple[int, int]:
+    """(entries, total materialized tuples) of the shared cache."""
+    with _SEQ_LOCK:
+        return (
+            len(_SEQ_CACHE),
+            sum(len(e.prefix) for e in _SEQ_CACHE.values()),
+        )

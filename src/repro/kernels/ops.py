@@ -28,6 +28,8 @@ __all__ = [
     "LAUNCH_COUNTS_BY_DEVICE",
     "PendingKeys",
     "device_key",
+    "device_probe_scan_launch",
+    "device_probe_walk_launch",
     "merge_topk",
     "on_tpu",
     "pad_bucket",
@@ -40,8 +42,16 @@ __all__ = [
 
 # Host-side launch accounting: bumped once per device dispatch of each op.
 # AMIH's batched verification asserts exactly one grouped launch per
-# (z-group, tuple-step) through this counter (see tests/test_verify_grouped).
-LAUNCH_COUNTS = {"verify_grouped": 0, "verify": 0}
+# (z-group, tuple-step) through this counter (see tests/test_verify_grouped);
+# the device probe path asserts O(1) launches per z-group through
+# "device_probe" (the fused walk) and "device_probe_scan" (the at-most-one
+# exhaustive fallback for truncated schedules).
+LAUNCH_COUNTS = {
+    "verify_grouped": 0,
+    "verify": 0,
+    "device_probe": 0,
+    "device_probe_scan": 0,
+}
 
 # Per-device split of the grouped-verify launches: device key -> count.
 # The mesh-resident sharded AMIH path places each shard's verification on
@@ -439,6 +449,183 @@ def verify_tuples_grouped_launch(
         interpret=not on_tpu(),
     )
     return PendingKeys(keys, B, C)
+
+
+def _probe_put(arrays, device):
+    """Commit per-call probe arrays: one device_put each to the placement
+    device, or a plain jnp.asarray on the default device."""
+    if device is not None:
+        return [jax.device_put(a, device) for a in arrays]
+    return [jnp.asarray(a) for a in arrays]
+
+
+def device_probe_walk_launch(
+    q_words,
+    q_sub,
+    z_sub,
+    pow1,
+    pow0,
+    t_stop,
+    k: int,
+    *,
+    sched,
+    csr,
+    p: int,
+    device=None,
+    use_pallas: bool | None = None,
+    tile: int | None = None,
+    cap: int | None = None,
+    check_every: int | None = None,
+    walk_budget: int | None = None,
+) -> dict:
+    """Dispatch the fused probing-walk launch for one z-group.
+
+    ``sched`` is a ``repro.core.probe_device.DeviceSchedule`` and ``csr``
+    the index's committed CSR dict; per-call arrays (queries, substring
+    values/popcounts, flip tables, per-query stop positions) are padded to
+    a power-of-two batch and committed to ``device``. ``walk_budget``
+    caps the loop iterations (default: the point where one exhaustive
+    scan launch costs about as much as a quarter of the walk done so
+    far); still-undone queries fall through to the scan launch, exactly
+    as with a truncated schedule. Returns a host dict with the per-query
+    position map and counters, sliced back to B rows:
+    {"posmap", "probes", "retrieved", "done", "cursor", "iters"}.
+    """
+    from ..core.probe_device import (
+        DEFAULT_CHECK_EVERY,
+        DEFAULT_PROBE_CAP,
+        DEFAULT_TILE,
+        KMAX,
+    )
+    from . import device_probe
+
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    tile = DEFAULT_TILE if tile is None else tile
+    if tile > DEFAULT_TILE:
+        raise ValueError(
+            f"tile={tile} exceeds the schedule pad margin {DEFAULT_TILE}"
+        )
+    cap = pad_bucket(DEFAULT_PROBE_CAP if cap is None else cap, minimum=8)
+    check_every = (
+        DEFAULT_CHECK_EVERY if check_every is None else max(1, check_every)
+    )
+    if walk_budget is None:
+        # each iteration verifies <= cap candidates; the scan verifies
+        # n_pad rows in one launch. Past n_pad/(4*cap) iterations the
+        # walk has burned a quarter of a scan without converging — on a
+        # deep walk the exhaustive launch is the cheaper way to finish.
+        walk_budget = max(4, int(csr["n_pad"]) // (4 * cap))
+    qh = np.ascontiguousarray(np.asarray(q_words))
+    B = qh.shape[0]
+    Bp = pad_bucket(B, minimum=1)
+
+    def pad_rows(a, fill=0):
+        a = np.asarray(a)
+        out = np.full((Bp,) + a.shape[1:], fill, dtype=a.dtype)
+        out[:B] = a
+        return out
+
+    # padded query rows start with t_stop = -1: born done, so they never
+    # probe, never block done.all(), and cost nothing
+    per_call = _probe_put(
+        [
+            pad_rows(qh),
+            pad_rows(np.asarray(q_sub, dtype=np.int32)),
+            pad_rows(np.asarray(z_sub, dtype=np.int32)),
+            pad_rows(np.asarray(pow1, dtype=np.int32)),
+            pad_rows(np.asarray(pow0, dtype=np.int32)),
+            pad_rows(np.asarray(t_stop, dtype=np.int32), fill=-1),
+            np.int32(k),
+            np.int32(sched.s_len),
+            np.int32(walk_budget),
+        ],
+        device,
+    )
+    bundle = sched.device_arrays(device)
+    dkey = device_key(device)
+    with _LAUNCH_LOCK:
+        LAUNCH_COUNTS["device_probe"] += 1
+        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
+            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+        )
+    posmap, probes, retrieved, done, cursor, iters = (
+        device_probe.device_probe_walk(
+            *per_call,
+            bundle["tbl"],
+            bundle["step_ext"],
+            bundle["idx1"],
+            bundle["idx0"],
+            bundle["maxi1"],
+            bundle["maxi0"],
+            bundle["widths"],
+            csr["offsets"],
+            csr["ids"],
+            csr["db_pad"],
+            bundle["inv_pos"],
+            p=p,
+            tile=tile,
+            cap=cap,
+            kmax=KMAX,
+            check_every=check_every,
+            use_pallas=use_pallas,
+            interpret=not on_tpu(),
+        )
+    )
+    return {
+        "posmap": np.asarray(posmap)[:B],
+        "probes": np.asarray(probes)[:B],
+        "retrieved": np.asarray(retrieved)[:B],
+        "done": np.asarray(done)[:B],
+        "cursor": int(cursor),
+        "iters": int(iters),
+    }
+
+
+def device_probe_scan_launch(
+    q_words,
+    *,
+    sched,
+    csr,
+    p: int,
+    device=None,
+    use_pallas: bool | None = None,
+    chunk: int = 2048,
+) -> np.ndarray:
+    """One exhaustive verify launch: the exact walk position of EVERY
+    stored code for each query — the fused scan fallback for queries a
+    truncated schedule left unfinished. Returns a host (B, n_pad) int32
+    position map."""
+    from . import device_probe
+
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    qh = np.ascontiguousarray(np.asarray(q_words))
+    B = qh.shape[0]
+    Bp = pad_bucket(B, minimum=1)
+    qp = np.zeros((Bp,) + qh.shape[1:], dtype=qh.dtype)
+    qp[:B] = qh
+    n_pad = csr["n_pad"]
+    chunk = min(pad_bucket(chunk, minimum=8), n_pad)
+    per_call = _probe_put([qp, np.int32(csr["n"])], device)
+    bundle = sched.device_arrays(device)
+    dkey = device_key(device)
+    with _LAUNCH_LOCK:
+        LAUNCH_COUNTS["device_probe_scan"] += 1
+        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
+            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+        )
+    pm = device_probe.device_probe_scan(
+        per_call[0],
+        csr["db_pad"],
+        bundle["inv_pos"],
+        per_call[1],
+        p=p,
+        chunk=chunk,
+        use_pallas=use_pallas,
+        interpret=not on_tpu(),
+    )
+    return np.asarray(pm)[:B]
 
 
 def verify_tuples_grouped_op(

@@ -356,11 +356,22 @@ class PersistentShardPool:
         self.mode = resolve_probe_mode(mode)
         self.entries = list(indexes)
         self.stats_factory = stats_factory
-        workers = max(1, min(
-            max_workers or len(self.entries),
-            len(self.entries),
-            multiprocessing.cpu_count(),
-        ))
+        # stand-down gate: a device-probing shard answers in one fused
+        # jitted launch per z-group — there is no host loop to overlap,
+        # a fork-child of a jax-initialized parent must never dispatch
+        # jax, and a single device serializes the launches anyway. Any
+        # device-backed shard collapses the pool to the inline path.
+        if any(
+            getattr(ix, "probe_backend", "host") == "device"
+            for _, ix in self.entries
+        ):
+            workers = 1
+        else:
+            workers = max(1, min(
+                max_workers or len(self.entries),
+                len(self.entries),
+                multiprocessing.cpu_count(),
+            ))
         self.groups = _partition(self.entries, workers)
         self.forks = 0                   # worker processes ever started
         self._procs: List[tuple] = []    # [(proc, task_conn, result_conn)]

@@ -64,6 +64,13 @@ class RetrievalConfig:
     # verify_tuples_grouped launch per step over the padded
     # (B_g, C_max, W) layout; DB stays device-resident from build).
     verify_backend: str = "numpy"
+    # AMIH probing walk: "host" (the reference per-tuple Python walk) or
+    # "device" (the fused probe -> bucket-lookup -> verify jitted launch,
+    # one per z-group; see core.probe_device). Applies to "amih" and
+    # "sharded_amih"; probe_stream_cap bounds the precompiled probing
+    # stream per (p, z) schedule before the scan fallback takes over.
+    probe_backend: str = "host"
+    probe_stream_cap: int = 1 << 16
     # linear_scan scoring: "numpy" (chunked host popcounts) or "pallas"
     # (streaming device top-K via kernels/ops.scan_topk + exact float64
     # host rerank).
@@ -226,6 +233,8 @@ class RetrievalService:
                 "verify_backend": self.rcfg.verify_backend,
                 "enumeration_cap": self.rcfg.enumeration_cap,
                 "overlap_verify": self.rcfg.pipelined,
+                "probe_backend": self.rcfg.probe_backend,
+                "probe_stream_cap": self.rcfg.probe_stream_cap,
             }
         elif self.rcfg.backend == "linear_scan":
             cfg = {"compute_backend": self.rcfg.compute_backend}
@@ -241,6 +250,8 @@ class RetrievalService:
                 "enumeration_cap": self.rcfg.enumeration_cap,
                 "probe_workers": self.rcfg.probe_workers,
                 "probe_mode": self.rcfg.probe_mode,
+                "probe_backend": self.rcfg.probe_backend,
+                "probe_stream_cap": self.rcfg.probe_stream_cap,
             }
         self.engine = make_engine(
             self.rcfg.backend, self.db_words, self.rcfg.code_bits, **cfg

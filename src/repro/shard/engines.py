@@ -297,6 +297,12 @@ class ShardedAMIHEngine(SearchEngine):
     once, on the engine's first parallel call, and each later call ships
     its task over the standing worker pipes (``engine.close()`` releases
     them; GC does too).
+
+    ``probe_backend="device"`` builds every shard index with the fused
+    device probing walk (see core.probe_device): each shard answers in
+    one jitted launch per z-group, so the host probe pool stands down
+    entirely — no workers ever fork — and ``stats.per_shard`` records
+    the backend next to the shard's device.
     """
 
     name = "sharded_amih"
@@ -322,7 +328,8 @@ class ShardedAMIHEngine(SearchEngine):
     def __init__(self, db_words, p, plan, indexes, enumeration_cap,
                  probe_workers: Optional[int] = None,
                  prime_bound: bool = True,
-                 probe_mode: str = "auto"):
+                 probe_mode: str = "auto",
+                 probe_backend: str = "host"):
         self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
         self.p = p
         self.plan = plan
@@ -331,6 +338,7 @@ class ShardedAMIHEngine(SearchEngine):
         self.probe_workers = probe_workers
         self.prime_bound = prime_bound
         self.probe_mode = probe_mode
+        self.probe_backend = probe_backend
         self._pool = None           # PersistentShardPool, forked on first use
         self._closed = False
         # guards _pool/_closed: a knn_batch racing close() must not
@@ -352,6 +360,8 @@ class ShardedAMIHEngine(SearchEngine):
         probe_workers: Optional[int] = None,
         prime_bound: bool = True,
         probe_mode: str = "auto",
+        probe_backend: str = "host",
+        probe_stream_cap: int = 1 << 16,
         devices=None,
         **cfg: Any,
     ) -> "ShardedAMIHEngine":
@@ -371,9 +381,11 @@ class ShardedAMIHEngine(SearchEngine):
                 db[plan.shard_slice(s)], p, m=m,
                 verify_backend=verify_backend, id_offset=plan.starts[s],
                 device=plan.device_for(s),
+                probe_backend=probe_backend,
+                probe_stream_cap=probe_stream_cap,
             )))
         return cls(db, p, plan, indexes, enumeration_cap,
-                   probe_workers, prime_bound, probe_mode)
+                   probe_workers, prime_bound, probe_mode, probe_backend)
 
     @property
     def n(self) -> int:
@@ -399,6 +411,11 @@ class ShardedAMIHEngine(SearchEngine):
     def _use_parallel(self, B: int) -> bool:
         import multiprocessing
 
+        # the device probe path runs each shard as one fused launch per
+        # z-group — there is no host probing loop left to parallelize,
+        # so the worker pool never forks for it
+        if self.probe_backend == "device":
+            return False
         # mean rows per non-empty shard: robust to one straggler shard
         # in an otherwise-large custom plan (min would stand the pool
         # down) without letting one big shard drag seven tiny ones into
@@ -453,6 +470,7 @@ class ShardedAMIHEngine(SearchEngine):
                 "launches": launches,
                 "early_stopped": early_stopped,
                 "device": str(index.device),
+                "probe_backend": index.probe_backend,
             }
             for counter in ("probes", "retrieved", "verified",
                             "tuples_processed", "fell_back_to_scan"):

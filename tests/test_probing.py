@@ -6,10 +6,19 @@ from _hypothesis_compat import given, settings, st
 from repro.core.probing import (
     closed_form_prefix,
     first_anchor,
+    probing_cache_clear,
+    probing_cache_info,
+    probing_prefix,
     probing_sequence,
     second_anchor,
+    shared_probing_iter,
 )
-from repro.core.tuples import all_valid_tuples, rhat, sim_value
+from repro.core.tuples import (
+    all_valid_tuples,
+    rhat,
+    sim_squared_fraction,
+    sim_value,
+)
 
 
 @given(p=st.integers(1, 40), data=st.data())
@@ -74,3 +83,81 @@ def test_no_duplicates(p, data):
     z = data.draw(st.integers(0, p))
     seq = list(probing_sequence(p, z))
     assert len(seq) == len(set(seq))
+
+
+def _brute_force_eq5_order(p, z):
+    """Every valid tuple sorted by the paper's Eq. (5) similarity, in
+    exact rational arithmetic, with the generator's deterministic
+    tie-break (Hamming distance, then r1). sim >= 0 on the valid domain
+    (r1 <= z), so sim^2 sorts identically to sim."""
+    return sorted(
+        all_valid_tuples(p, z),
+        key=lambda t: (
+            -sim_squared_fraction(p, z, *t), t[0] + t[1], t[0],
+        ),
+    )
+
+
+@given(p=st.integers(1, 40), data=st.data())
+@settings(max_examples=100, deadline=None)
+def test_sequence_matches_brute_force_eq5_sort(p, data):
+    """The incremental anchor-driven walk (heap + Defs. 5a/5b) emits the
+    exact order a brute-force Eq. (5) sort of ALL valid tuples gives —
+    not just the same multiset of sims."""
+    z = data.draw(st.integers(1, p))
+    assert list(probing_sequence(p, z)) == _brute_force_eq5_order(p, z)
+
+
+@given(p=st.integers(2, 48), data=st.data())
+@settings(max_examples=60, deadline=None)
+def test_closed_form_prefix_matches_brute_force(p, data):
+    """Prop. 2's closed form is the head of the brute-force Eq. (5)
+    sort — the device schedule builder leans on both."""
+    z = data.draw(st.integers(1, p))
+    prefix = closed_form_prefix(p, z)
+    assert prefix == _brute_force_eq5_order(p, z)[: len(prefix)]
+
+
+# ----------------------------------------------------------- shared cache
+def test_probing_prefix_matches_generator():
+    probing_cache_clear()
+    p, z = 32, 11
+    want = list(probing_sequence(p, z, limit=50))
+    got = probing_prefix(p, z, 50)
+    assert got[:50] == want
+    # a longer ask extends the same entry, never rebuilds it
+    longer = probing_prefix(p, z, 200)
+    assert longer[:50] == want
+    entries, total = probing_cache_info()
+    assert entries == 1 and total >= 200
+
+
+def test_probing_prefix_clamps_to_sequence_length():
+    probing_cache_clear()
+    p, z = 6, 2
+    full = list(probing_sequence(p, z))
+    got = probing_prefix(p, z, 10_000)
+    assert got == full  # (z+1)(p-z+1) tuples, no padding past the end
+
+
+def test_shared_probing_iter_replays_and_extends():
+    probing_cache_clear()
+    p, z = 40, 13
+    it1 = shared_probing_iter(p, z)
+    head = [next(it1) for _ in range(30)]
+    # a second consumer replays the materialized prefix bit-for-bit and
+    # keeps extending past it; interleaving the two stays consistent
+    it2 = shared_probing_iter(p, z)
+    assert [next(it2) for _ in range(30)] == head
+    assert [next(it1) for _ in range(20)] == [next(it2) for _ in range(20)]
+    assert head + [next(it2) for _ in range(0)] == list(
+        probing_sequence(p, z, limit=30)
+    )
+
+
+def test_probing_cache_clear_resets():
+    probing_cache_clear()
+    probing_prefix(24, 7, 40)
+    assert probing_cache_info()[0] == 1
+    probing_cache_clear()
+    assert probing_cache_info() == (0, 0)
