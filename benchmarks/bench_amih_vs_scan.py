@@ -21,9 +21,12 @@ cells too.
 
 A ``--probe-backend`` axis times every amih / sharded_amih cell under
 both probing walks — "host" (the reference Python walk) and "device"
-(the fused one-launch-per-z-group walk, repro.core.probe_device) — and
-each row records which one answered it, so scripts/bench_check.py gates
-host-vs-host and device-vs-device separately.
+(the fused batch walk, ONE launch per knn_batch call with every z-group
+stacked in; repro.core.probe_device) — and each row records which one
+answered it, so scripts/bench_check.py gates host-vs-host and
+device-vs-device separately. Device rows also record the launch economy
+(walk/scan launches per sweep, ``launches_per_batch``), which
+bench_check gates against the committed baseline.
 
 Emits artifacts/bench/amih_vs_scan.csv plus a machine-readable
 BENCH_engine.json at the repo root (per-backend, per-batch-size,
@@ -36,6 +39,8 @@ Run:  PYTHONPATH=src python benchmarks/bench_amih_vs_scan.py --batch 64
 from __future__ import annotations
 
 import argparse
+import contextlib
+import gc
 import json
 import os
 import sys
@@ -62,6 +67,24 @@ REPEATS = 3  # best-of; host timing at sub-ms/query is noisy, and a
              # single transient (GC, scheduler) can poison a 2-sample min
 
 
+@contextlib.contextmanager
+def _gc_paused():
+    """Collect outside the timed region, then keep the collector off
+    inside it. A long sweep keeps every engine/db/jit cache alive, so a
+    gen-2 collection grows to tens of ms — and a cell timed as ONE
+    fused-launch call per sweep can't dodge a pause by best-of-REPEATS
+    the way a many-small-calls cell does. Timing with the collector
+    paused measures the algorithm for both shapes alike."""
+    gc.collect()
+    was_enabled = gc.isenabled()
+    gc.disable()
+    try:
+        yield
+    finally:
+        if was_enabled:
+            gc.enable()
+
+
 def _verify_launches(engine) -> int:
     """Grouped-verify dispatches so far: the single index's counter, or
     the per-shard sum for the sharded AMIH backend."""
@@ -73,23 +96,48 @@ def _verify_launches(engine) -> int:
     )
 
 
+def _probe_launch_counts():
+    """(walk, scan) device probe launch counters so far — 0s when jax
+    (hence the device probe path) was never imported."""
+    mod = sys.modules.get("repro.kernels.ops")
+    if mod is None:
+        return 0, 0
+    return (mod.LAUNCH_COUNTS["device_probe"],
+            mod.LAUNCH_COUNTS["device_probe_scan"])
+
+
 def _time_batched(engine, qs, k, batch):
     """Best-of-REPEATS wall seconds + aggregated stats for all queries,
     batch at a time (first repeat warms caches, as serving would).
-    ``verify_launches`` is per-sweep (one pass over all queries)."""
+    ``verify_launches`` and the walk/scan probe-launch counters are
+    per-sweep (one pass over all queries); ``launches_per_batch`` is the
+    launch-economy number bench_check gates on — fused probing keeps it
+    O(1) per knn_batch call no matter how many z-groups a batch mixes."""
     best, totals = float("inf"), {}
+    cache_info = {}
     launches0 = _verify_launches(engine)
+    walk0, scan0 = _probe_launch_counts()
     for _ in range(REPEATS):
-        t0 = time.perf_counter()
-        totals = {"probes": 0, "verified": 0, "fell_back_to_scan": 0}
-        for lo in range(0, len(qs), batch):
-            _, _, stats = engine.knn_batch(qs[lo : lo + batch], k)
-            agg = stats.aggregate()
-            for key in totals:
-                totals[key] += agg.get(key, 0)
-        best = min(best, time.perf_counter() - t0)
+        with _gc_paused():
+            t0 = time.perf_counter()
+            totals = {"probes": 0, "verified": 0, "fell_back_to_scan": 0}
+            for lo in range(0, len(qs), batch):
+                _, _, stats = engine.knn_batch(qs[lo : lo + batch], k)
+                agg = stats.aggregate()
+                for key in totals:
+                    totals[key] += agg.get(key, 0)
+                cache_info = getattr(stats, "cache_info", {}) or cache_info
+            best = min(best, time.perf_counter() - t0)
     launches = _verify_launches(engine) - launches0
+    walk1, scan1 = _probe_launch_counts()
     totals["verify_launches"] = launches // REPEATS
+    totals["walk_launches"] = (walk1 - walk0) // REPEATS
+    totals["scan_launches"] = (scan1 - scan0) // REPEATS
+    calls = max(1, -(-len(qs) // batch))   # knn_batch calls per sweep
+    totals["launches_per_batch"] = round(
+        totals["walk_launches"] / calls, 4
+    )
+    totals["cache_info"] = cache_info
     return best, totals
 
 
@@ -99,11 +147,12 @@ def _time_seed_loop(index, qs, k):
     the seed implementation, which had no cross-query reuse)."""
     best = float("inf")
     for _ in range(REPEATS):
-        t0 = time.perf_counter()
-        for q in qs:
-            probing_cache_clear()
-            index.knn(q, k)
-        best = min(best, time.perf_counter() - t0)
+        with _gc_paused():
+            t0 = time.perf_counter()
+            for q in qs:
+                probing_cache_clear()
+                index.knn(q, k)
+            best = min(best, time.perf_counter() - t0)
     return best
 
 
@@ -128,9 +177,9 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
             "batch": batch, "shards": n_shards, "queries": nq,
             "m_tables": m_tables,
             # which probing walk answered the cell: "host" (reference
-            # Python walk) or "device" (fused one-launch-per-z-group).
-            # bench_check keys cells on it, so the two backends gate
-            # against their own baselines.
+            # Python walk) or "device" (fused batch walk, one launch per
+            # knn_batch call). bench_check keys cells on it, so the two
+            # backends gate against their own baselines.
             "probe_backend": probe_backend,
             # distinct placement devices the shards landed on (sharded
             # backends; 1 on a single-device host). bench_check excludes
@@ -142,6 +191,23 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
             "probes": totals.get("probes", 0),
             "verified": totals.get("verified", 0),
             "verify_launches": totals.get("verify_launches", 0),
+            # launch economy (device probe path; 0 on host cells): walk /
+            # scan-fallback dispatches per sweep and the per-knn_batch
+            # walk-launch rate bench_check gates on — O(1) per batch with
+            # fused probing, O(z-groups) without
+            "walk_launches": totals.get("walk_launches", 0),
+            "scan_launches": totals.get("scan_launches", 0),
+            "launches_per_batch": totals.get("launches_per_batch", 0),
+            # shared-cache effectiveness after the sweep (S1): probing
+            # sequence + device schedule hit/miss lifetime counters
+            "probing_hits": totals.get("cache_info", {}).get(
+                "probing_hits", 0),
+            "probing_misses": totals.get("cache_info", {}).get(
+                "probing_misses", 0),
+            "schedule_hits": totals.get("cache_info", {}).get(
+                "schedule_hits", 0),
+            "schedule_misses": totals.get("cache_info", {}).get(
+                "schedule_misses", 0),
             "fell_back_to_scan": totals.get("fell_back_to_scan", 0),
             "seed_loop_ms_per_query":
                 "" if t_seed is None else round(1e3 * t_seed / nq, 4),

@@ -7,7 +7,12 @@ committed baseline, restricted to the requested batch sizes) is compared
 cell-by-cell: for every amih / sharded_amih / sharded_scan
 (backend, p, n, K, batch, shards) cell present in both runs, fail if
 fresh throughput regressed by more than ``--threshold`` (default 25% on
-ms_per_query). When the committed baseline carries a ``"serving"``
+ms_per_query). Cells carrying ``launches_per_batch`` (device probe rows
+of a post-fusion bench) additionally gate the LAUNCH ECONOMY: walk
+launches per knn_batch call are deterministic, so any increase over the
+committed baseline fails outright — a config change that silently
+un-fuses the batch walk can't hide behind timing noise. Baselines
+written before the field existed skip that gate per cell. When the committed baseline carries a ``"serving"``
 section (benchmarks/bench_serving.py: pipelined vs sequential serving
 cells with p50/p99 latency, persistent-pool and placement fields),
 those cells are gated the same way; older baselines without the section
@@ -46,13 +51,14 @@ _GATED_BACKENDS = ("amih", "sharded_amih", "sharded_scan")
 
 def _cells(payload, batches, max_n, shards):
     """(backend, p, n, K, batch, shards, probe_backend) ->
-    (ms_per_query, config) for every gated cell. Sharded rows ride the
-    max batch size regardless of --batch; pre-shard baselines carry
-    shards=1 implicitly, and rows written before the probe_backend axis
-    existed gate as "host" (the only walk back then). ``config`` is the
-    cell's placement fingerprint (distinct devices the shards landed
-    on) — rows written before placement existed carry None and compare
-    against anything."""
+    (ms_per_query, config, launches_per_batch) for every gated cell.
+    Sharded rows ride the max batch size regardless of --batch;
+    pre-shard baselines carry shards=1 implicitly, and rows written
+    before the probe_backend axis existed gate as "host" (the only walk
+    back then). ``config`` is the cell's placement fingerprint (distinct
+    devices the shards landed on) — rows written before placement
+    existed carry None and compare against anything, as do rows written
+    before ``launches_per_batch`` for the launch-economy gate."""
     out = {}
     for row in payload["rows"]:
         if row["backend"] not in _GATED_BACKENDS:
@@ -66,7 +72,8 @@ def _cells(payload, batches, max_n, shards):
             continue
         key = (row["backend"], row["p"], row["n"], row["K"],
                row["batch"], n_shards, row.get("probe_backend", "host"))
-        out[key] = (float(row["ms_per_query"]), row.get("devices"))
+        out[key] = (float(row["ms_per_query"]), row.get("devices"),
+                    row.get("launches_per_batch"))
     return out
 
 
@@ -285,22 +292,43 @@ def main(argv=None) -> int:
             max(c[2] for c in failures),
             sizes=sorted({c[2] for c in failures}),
         )
-        for cell, (ms, _) in retry.items():
+        for cell, (ms, _cfg, _lpb) in retry.items():
             if cell in fresh_ms:
                 fresh_ms[cell] = min(fresh_ms[cell], ms)
         failures = regressed(shared)
 
+    # Launch economy: walk launches per knn_batch call are deterministic
+    # (no retry needed) — any increase over the baseline means probing
+    # stopped fusing and fails outright. Cells where either side predates
+    # the field skip this gate.
+    launch_failures = [
+        c for c in shared
+        if base_cells[c][2] is not None and fresh_cells[c][2] is not None
+        and float(fresh_cells[c][2]) > float(base_cells[c][2])
+    ]
+
     for cell in shared:
         ratio = fresh_ms[cell] / max(base_ms[cell], 1e-9)
-        status = "FAIL" if cell in failures else "ok"
+        status = "FAIL" if cell in failures or cell in launch_failures \
+            else "ok"
         backend, p, n, K, batch, n_shards, pb = cell
+        lpb = fresh_cells[cell][2]
+        launch_note = "" if lpb is None else f" launches/batch={lpb}"
         print(f"  [{status}] {backend:>13}[{pb}] p={p} n={n:>9} "
               f"K={K:>3} B={batch:>3} S={n_shards:>2} "
               f"baseline={base_ms[cell]:.3f} fresh={fresh_ms[cell]:.3f} "
-              f"ms/q ({ratio:.2f}x)")
-    if failures:
-        print(f"bench_check: {len(failures)}/{len(shared)} engine cells "
-              f"regressed beyond {args.threshold:.0%}")
+              f"ms/q ({ratio:.2f}x){launch_note}")
+    for cell in launch_failures:
+        print(f"bench_check: LAUNCH ECONOMY regression in {cell}: "
+              f"{base_cells[cell][2]} -> {fresh_cells[cell][2]} walk "
+              f"launches per batch")
+    if failures or launch_failures:
+        if failures:
+            print(f"bench_check: {len(failures)}/{len(shared)} engine "
+                  f"cells regressed beyond {args.threshold:.0%}")
+        if launch_failures:
+            print(f"bench_check: {len(launch_failures)}/{len(shared)} "
+                  f"engine cells regressed launches-per-batch")
         return 1
     print(f"bench_check: all {len(shared)} engine cells within "
           f"{args.threshold:.0%} of the committed baseline")

@@ -1,0 +1,39 @@
+#!/usr/bin/env bash
+# Benchmark environment hygiene: source this before timing runs so bench
+# numbers measure the algorithm, not the allocator or logging noise.
+#
+#   source scripts/bench_env.sh
+#   PYTHONPATH=src python benchmarks/bench_amih_vs_scan.py --batch 64
+#
+# scripts/verify.sh sources it automatically for the REPRO_BENCH_CHECK=1
+# gate. Everything here is optional and degrades gracefully: a host
+# without tcmalloc just keeps glibc malloc, and caller-set XLA_FLAGS are
+# preserved. Knobs (see docs/tuning.md):
+#
+#   - tcmalloc via LD_PRELOAD: thread-caching malloc is measurably
+#     faster for the bench's churn of short-lived NumPy buffers
+#     (extraction scratch, per-batch pads), and keeps its speed once
+#     the posmap donation pool removes the large steady-state
+#     allocations.
+#   - TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD: silence tcmalloc's
+#     large-alloc warnings (device CSR uploads and big sims scratch trip
+#     the default threshold and pollute timing output).
+#   - TF_CPP_MIN_LOG_LEVEL=4: mute XLA/TSL C++ chatter on stderr.
+#   - XLA_FLAGS --xla_force_host_platform_device_count: pin the host
+#     platform's fake-device count to 1 unless the caller already chose
+#     a layout — a surprise multi-device host would silently change the
+#     sharded cells' placement (and bench_check would skip them as
+#     config drift).
+
+_TCMALLOC=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [[ -f "${_TCMALLOC}" ]]; then
+  export LD_PRELOAD="${_TCMALLOC}${LD_PRELOAD:+:$LD_PRELOAD}"
+  export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+unset _TCMALLOC
+
+export TF_CPP_MIN_LOG_LEVEL=4
+
+if [[ "${XLA_FLAGS:-}" != *xla_force_host_platform_device_count* ]]; then
+  export XLA_FLAGS="--xla_force_host_platform_device_count=1${XLA_FLAGS:+ $XLA_FLAGS}"
+fi

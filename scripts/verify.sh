@@ -16,5 +16,8 @@ python -m repro.pipeline.smoke
 # README/docs/ROADMAP must still exist (see scripts/check_docs.py).
 python scripts/check_docs.py
 if [[ "${REPRO_BENCH_CHECK:-0}" == "1" ]]; then
+  # bench hygiene (tcmalloc, quiet XLA logs, pinned host device count):
+  # timing noise is the gate's enemy — see scripts/bench_env.sh
+  source scripts/bench_env.sh
   python scripts/bench_check.py --max-n "${REPRO_BENCH_CHECK_MAX_N:-10000}"
 fi

@@ -184,14 +184,18 @@ class AMIHIndex:
     # group loop below; "device" compiles the whole walk — probe-step
     # enumeration, CSR bucket lookup, candidate dedup, grouped
     # verification, and Prop. 2 early termination — into ONE jitted
-    # launch per z-group (see core/probe_device.py and
-    # kernels/device_probe.py). Both are exact and bit-identical.
+    # launch per batch, every z-group fused (see core/probe_device.py
+    # and kernels/device_probe.py). Both are exact and bit-identical.
     probe_backend: str = "host"
     # Device-path schedule bound: max precomputed probe-stream entries
     # per (p, z). Walks that would exceed it are truncated and finish
     # through the fused scan fallback (the device analogue of the host
     # enumeration-cap guard).
     probe_stream_cap: int = 1 << 16
+    # Device-path launch shape: True (default) fuses every z-group of a
+    # batch into ONE walk launch via the schedule stack; False keeps the
+    # PR 6 one-launch-per-z-group shape (the fused path's parity oracle).
+    probe_fused: bool = True
     # Grouped verification dispatches so far (one per (z-group, tuple-step)
     # with fresh candidates, unless a step exceeds verify_elem_budget and
     # is chunked). Benchmarks/tests assert launch economy through this.
@@ -225,6 +229,7 @@ class AMIHIndex:
         device: Optional[object] = None,
         probe_backend: str = "host",
         probe_stream_cap: int = 1 << 16,
+        probe_fused: bool = True,
     ) -> "AMIHIndex":
         if verify_backend not in ("numpy", "pallas"):
             raise ValueError(f"unknown verify_backend {verify_backend!r}")
@@ -255,7 +260,7 @@ class AMIHIndex:
             p=p, m=m, db_words=db_words, tables=tables,
             verify_backend=verify_backend, id_offset=id_offset,
             device=device, probe_backend=probe_backend,
-            probe_stream_cap=probe_stream_cap,
+            probe_stream_cap=probe_stream_cap, probe_fused=probe_fused,
         )
         if verify_backend == "pallas":
             index.db_dev  # upload once, at build time
@@ -442,8 +447,10 @@ class AMIHIndex:
         software-pipelined one tuple step deep instead.
 
         With ``probe_backend="device"`` the whole group loop is replaced
-        by the fused device walk (one launch per z-group, plus at most
-        one scan-fallback launch): results and the early-termination
+        by the fused device walk (ONE launch for the whole batch — every
+        z-group shares it via the schedule stack — plus at most one
+        scan-fallback launch; ``probe_fused=False`` restores the PR 6
+        one-launch-per-z-group shape): results and the early-termination
         contract are identical, but ``enumeration_cap`` and ``overlap``
         are no-ops there — the device path bounds work through
         ``probe_stream_cap`` / the fused scan, and has no host loop left

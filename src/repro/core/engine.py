@@ -56,6 +56,7 @@ __all__ = [
     "SearchEngine",
     "available_backends",
     "make_engine",
+    "probe_cache_snapshot",
     "register_engine",
 ]
 
@@ -78,7 +79,11 @@ class EngineStats:
     codes live on and its verification ran on) — the serving-side view
     of where a batch's work landed. ``cache_hits`` counts query rows
     answered from the engine's hot-query cache without any probing
-    (AMIHEngine's LRU).
+    (AMIHEngine's LRU). ``cache_info`` snapshots the process-wide shared
+    caches after the batch: the (p, z) probing-sequence cache and — on
+    the device probe path — the device schedule cache, each with
+    occupancy plus lifetime hit/miss counters (see
+    ``probe_cache_snapshot``); empty for backends that touch neither.
 
     Streaming serving (repro.pipeline.stream) fills the queue-side
     counters: ``queue_depth`` is the number of queries still waiting
@@ -94,6 +99,7 @@ class EngineStats:
     shards: int = 0
     per_shard: List[Dict[str, int]] = field(default_factory=list)
     cache_hits: int = 0
+    cache_info: Dict[str, int] = field(default_factory=dict)
     queue_depth: int = 0
     latency_ms: Dict[str, float] = field(default_factory=dict)
 
@@ -174,6 +180,23 @@ class SearchEngine(abc.ABC):
         return np.ascontiguousarray(q)
 
 
+def probe_cache_snapshot() -> Dict[str, int]:
+    """Occupancy + lifetime hit/miss counters of the process-wide probing
+    caches: the shared (p, z) sequence cache always, plus the device
+    schedule/stack cache when the device probe path has been imported.
+    Engines stamp this into ``EngineStats.cache_info`` per batch, so the
+    benchmark rows can report cache effectiveness per cell."""
+    from .probing import probing_cache_stats
+
+    out: Dict[str, int] = dict(probing_cache_stats())
+    import sys
+
+    mod = sys.modules.get(__package__ + ".probe_device")
+    if mod is not None:   # only if already imported: no jax import here
+        out.update(mod.schedule_cache_stats())
+    return out
+
+
 ENGINES: Dict[str, type] = {}
 
 
@@ -204,18 +227,25 @@ def make_engine(
       - "amih"          — angular multi-index hashing (paper §5).
                           ``m``, ``verify_backend`` ("numpy" | "pallas"),
                           ``probe_backend`` ("host" | "device" — the
-                          fused one-launch-per-z-group probing walk),
-                          ``probe_stream_cap``, ``enumeration_cap``,
-                          ``query_cache_size``, ``overlap_verify``.
+                          fused probing walk: ONE launch for the whole
+                          batch, every z-group stacked into it;
+                          ``probe_fused=False`` restores one launch per
+                          z-group), ``probe_stream_cap``,
+                          ``enumeration_cap``, ``query_cache_size``,
+                          ``overlap_verify``.
       - "sharded_scan"  — row-sharded exhaustive scan (repro.shard).
                           ``mesh`` | ``num_shards`` | ``plan``,
                           ``shard_axes``, ``devices``, ``chunk``.
       - "sharded_amih"  — one shard-local AMIH index per slice, each
-                          placed on its own device.
+                          placed on its own device; with
+                          ``probe_backend="device"`` the shards on each
+                          device fuse into ONE launch per device,
+                          dispatched to all devices without blocking.
                           sharding knobs as above plus ``m``,
                           ``verify_backend``, ``probe_backend``,
-                          ``enumeration_cap``, ``probe_workers``,
-                          ``probe_mode``, ``prime_bound``.
+                          ``probe_fused``, ``enumeration_cap``,
+                          ``probe_workers``, ``probe_mode``,
+                          ``prime_bound``.
 
     Every backend answers the same batched ``knn_batch(q_words, k)`` and
     returns results bit-identical to ``linear_scan_knn`` (up to ties
@@ -519,6 +549,7 @@ class AMIHEngine(SearchEngine):
         overlap_verify: bool = False,
         probe_backend: str = "host",
         probe_stream_cap: int = 1 << 16,
+        probe_fused: bool = True,
         **cfg: Any,
     ) -> "AMIHEngine":
         if cfg:
@@ -530,6 +561,7 @@ class AMIHEngine(SearchEngine):
             db_words, p, m=m, verify_backend=verify_backend,
             probe_backend=probe_backend,
             probe_stream_cap=probe_stream_cap,
+            probe_fused=probe_fused,
         )
         return cls(index, enumeration_cap, query_cache_size, overlap_verify)
 
@@ -608,5 +640,5 @@ class AMIHEngine(SearchEngine):
         self.cache_hits += hits
         return ids_out, sims_out, EngineStats(
             backend=self.name, queries=B, per_query=per_query,
-            cache_hits=hits,
+            cache_hits=hits, cache_info=probe_cache_snapshot(),
         )

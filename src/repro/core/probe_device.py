@@ -72,11 +72,16 @@ __all__ = [
     "KMAX",
     "MAX_OFFSET_WIDTH",
     "POS_INF",
+    "ScheduleStack",
     "build_device_csr",
+    "dispatch_groups_device",
     "get_schedule",
+    "get_schedule_stack",
+    "resolve_groups_device",
     "run_groups_device",
     "schedule_cache_clear",
     "schedule_cache_info",
+    "schedule_cache_stats",
 ]
 
 # Max flips per substring probe the schedule encodes (index columns per
@@ -304,6 +309,8 @@ def _build_schedule(
 _SCHED_CACHE: "OrderedDict[tuple, DeviceSchedule]" = OrderedDict()
 _SCHED_CACHE_MAX = 32
 _SCHED_LOCK = threading.RLock()
+_SCHED_HITS = 0
+_SCHED_MISSES = 0
 
 
 def get_schedule(
@@ -311,12 +318,15 @@ def get_schedule(
 ) -> DeviceSchedule:
     """Process-wide LRU of device walk schedules — like the probing-prefix
     cache, one (p, m, widths, z) schedule serves every index and shard."""
+    global _SCHED_HITS, _SCHED_MISSES
     key = (p, m, tuple(widths), z, stream_cap)
     with _SCHED_LOCK:
         sched = _SCHED_CACHE.get(key)
         if sched is not None:
             _SCHED_CACHE.move_to_end(key)
+            _SCHED_HITS += 1
             return sched
+        _SCHED_MISSES += 1
     built = _build_schedule(p, m, tuple(widths), z, stream_cap)
     with _SCHED_LOCK:
         sched = _SCHED_CACHE.setdefault(key, built)
@@ -329,6 +339,8 @@ def get_schedule(
 def schedule_cache_clear() -> None:
     with _SCHED_LOCK:
         _SCHED_CACHE.clear()
+    with _STACK_LOCK:
+        _STACK_CACHE.clear()
 
 
 def schedule_cache_info() -> Tuple[int, int]:
@@ -338,6 +350,181 @@ def schedule_cache_info() -> Tuple[int, int]:
             len(_SCHED_CACHE),
             sum(s.s_len for s in _SCHED_CACHE.values()),
         )
+
+
+def schedule_cache_stats() -> Dict[str, int]:
+    """Process-wide schedule-cache health: entries/stream size plus the
+    cumulative ``get_schedule`` hit/miss counts (threaded into
+    ``EngineStats.cache_info`` and recorded in bench rows, so a cache
+    regression shows up as a miss-rate jump instead of a latency mystery)."""
+    with _SCHED_LOCK:
+        entries, stream = (
+            len(_SCHED_CACHE),
+            sum(s.s_len for s in _SCHED_CACHE.values()),
+        )
+        hits, misses = _SCHED_HITS, _SCHED_MISSES
+    return {
+        "schedule_entries": entries,
+        "schedule_stream": stream,
+        "schedule_hits": hits,
+        "schedule_misses": misses,
+    }
+
+
+# ----------------------------------------------------------------- stack
+class ScheduleStack:
+    """Grow-only concatenation of every z-schedule of one
+    (p, m, widths, stream_cap) config — the batched form of
+    ``DeviceSchedule`` the fused cross-z-group walk indexes by row.
+
+    Each new z appends one *segment* of ``s_len + DEFAULT_TILE`` entries
+    to the flat stream arrays (the stream itself plus a tile of inert
+    pad entries, so a frozen group's cursor can over-advance by one tile
+    without reading a neighbor's stream); per-row ``g_start``/``g_end``
+    bound the real entries and the inverse-position tables stack one row
+    per z. Host capacity grows by power-of-two buckets and the committed
+    per-device bundle is re-uploaded only when the version changes, so
+    the jit trace cache sees O(log) distinct stream lengths and steady-
+    state serving re-commits nothing.
+    """
+
+    def __init__(self, p: int, m: int, widths: Tuple[int, ...],
+                 stream_cap: int):
+        self.p = p
+        self.m = m
+        self.widths = tuple(widths)
+        self.stream_cap = stream_cap
+        self.wmax = max(widths)
+        self.rows: Dict[int, int] = {}          # z -> row index
+        self.scheds: List[DeviceSchedule] = []  # one per row
+        self.g_start: List[int] = []
+        self.g_end: List[int] = []
+        self.version = 0
+        self._used = 0
+        self._cap = 0
+        self.tbl = np.zeros(0, dtype=np.int32)
+        self.step = np.zeros(0, dtype=np.int32)
+        self.idx1 = np.zeros((0, KMAX), dtype=np.int32)
+        self.idx0 = np.zeros((0, KMAX), dtype=np.int32)
+        self.maxi1 = np.zeros(0, dtype=np.int32)
+        self.maxi0 = np.zeros(0, dtype=np.int32)
+        self._dev: Dict[str, tuple] = {}        # dkey -> (version, bundle)
+        self._lock = threading.RLock()
+
+    def _grow(self, need: int) -> None:
+        from ..kernels import ops
+
+        cap = ops.pad_bucket(need, minimum=4 * DEFAULT_TILE)
+        for name in ("tbl", "step", "idx1", "idx0", "maxi1", "maxi0"):
+            old = getattr(self, name)
+            shape = (cap,) + old.shape[1:]
+            new = np.zeros(shape, dtype=np.int32)
+            new[: len(old)] = old
+            setattr(self, name, new)
+        self._cap = cap
+
+    def row(self, z: int) -> int:
+        """The stack row for popcount ``z``, appending (and versioning)
+        on first sight. Thread-safe; rows never move once assigned."""
+        with self._lock:
+            r = self.rows.get(z)
+            if r is not None:
+                return r
+        sched = get_schedule(self.p, self.m, self.widths, z,
+                             self.stream_cap)
+        with self._lock:
+            r = self.rows.get(z)
+            if r is not None:
+                return r
+            seg = sched.s_len + DEFAULT_TILE
+            start = self._used
+            if start + seg > self._cap:
+                self._grow(start + seg)
+            # the schedule's own pad entries (step=built, maxi=1<<30)
+            # fill the segment margin, so a cursor parked past g_end
+            # still reads its group's completed-step count
+            self.tbl[start : start + seg] = sched.tbl[:seg]
+            self.step[start : start + seg] = sched.step_ext[:seg]
+            self.idx1[start : start + seg] = sched.idx1[:seg]
+            self.idx0[start : start + seg] = sched.idx0[:seg]
+            self.maxi1[start : start + seg] = sched.maxi1[:seg]
+            self.maxi0[start : start + seg] = sched.maxi0[:seg]
+            self._used = start + seg
+            self.scheds.append(sched)
+            self.g_start.append(start)
+            self.g_end.append(start + sched.s_len)
+            r = len(self.scheds) - 1
+            self.rows[z] = r
+            self.version += 1
+            return r
+
+    def device_arrays(self, device) -> dict:
+        """The committed jnp bundle for ``device`` at the current
+        version (row-count and capacity padded to power-of-two buckets;
+        re-uploaded only after a new z grew the stack)."""
+        from ..kernels import ops
+
+        key = ops.device_key(device)
+        with self._lock:
+            cur = self._dev.get(key)
+            if cur is not None and cur[0] == self.version:
+                return cur[1]
+            G = len(self.scheds)
+            G_pad = ops.pad_bucket(G, minimum=1)
+            g_start = np.zeros(G_pad, dtype=np.int32)
+            g_start[:G] = self.g_start
+            g_end = np.zeros(G_pad, dtype=np.int32)
+            g_end[:G] = self.g_end
+            pp2 = (self.p + 1) * (self.p + 1)
+            inv = np.full((G_pad, pp2), POS_INF, dtype=np.int32)
+            for i, s in enumerate(self.scheds):
+                inv[i] = s.inv_pos
+
+            import jax
+            import jax.numpy as jnp
+
+            put = (
+                (lambda a: jax.device_put(a, device))
+                if device is not None
+                else jnp.asarray
+            )
+            bundle = {
+                "g_start": put(g_start),
+                "g_end": put(g_end),
+                "tbl": put(self.tbl),
+                "step": put(self.step),
+                "idx1": put(self.idx1),
+                "idx0": put(self.idx0),
+                "maxi1": put(self.maxi1),
+                "maxi0": put(self.maxi0),
+                "inv_pos": put(inv),
+                "widths": put(np.asarray(self.widths, dtype=np.int32)),
+            }
+            self._dev[key] = (self.version, bundle)
+            return bundle
+
+
+_STACK_CACHE: "OrderedDict[tuple, ScheduleStack]" = OrderedDict()
+_STACK_CACHE_MAX = 8
+_STACK_LOCK = threading.RLock()
+
+
+def get_schedule_stack(
+    p: int, m: int, widths: Tuple[int, ...], stream_cap: int
+) -> ScheduleStack:
+    """Process-wide LRU of schedule stacks: one grow-only stack per
+    (p, m, widths, stream_cap) config serves every index and shard,
+    exactly like ``get_schedule`` one level down."""
+    key = (p, m, tuple(widths), stream_cap)
+    with _STACK_LOCK:
+        stack = _STACK_CACHE.get(key)
+        if stack is None:
+            stack = ScheduleStack(p, m, tuple(widths), stream_cap)
+            _STACK_CACHE[key] = stack
+        _STACK_CACHE.move_to_end(key)
+        while len(_STACK_CACHE) > _STACK_CACHE_MAX:
+            _STACK_CACHE.popitem(last=False)
+        return stack
 
 
 # ------------------------------------------------------------------- CSR
@@ -424,6 +611,209 @@ def _pow_arrays(
 
 
 # ---------------------------------------------------------------- driver
+def _extract(pm, ts, n, k, sims64):
+    """The k smallest (position, id) pairs of one query's position map:
+    (out_ids local int64, out_pos int64, out_sims float64)."""
+    # work on the found subset only: the full-width (n,) compare is one
+    # cheap pass, everything after is O(cnt log cnt)
+    idx = np.flatnonzero(pm <= ts)
+    take = min(k, idx.size)
+    if take > 0:
+        pos_f = pm[idx].astype(np.int64)
+        order = np.argsort(pos_f * n + idx)[:take]
+        out_ids = idx[order].astype(np.int64)
+        out_pos = pos_f[order]
+        out_sims = sims64[out_pos]
+    else:
+        out_ids = _EMPTY_I64
+        out_pos = _EMPTY_I64
+        out_sims = np.empty(0, dtype=np.float64)
+    return out_ids, out_pos, out_sims
+
+
+def _record_stats(st, sched, pm, out_pos, take, probes, retrieved,
+                  scanned, r_hat):
+    st.probes += int(probes)
+    st.retrieved += int(retrieved)
+    st.verified += int((pm != POS_INF).sum())
+    t_last = int(out_pos[-1]) if take else -1
+    st.tuples_processed += t_last + 1
+    if t_last >= 0:
+        st.max_radius = max(st.max_radius, int(sched.cum_maxrad[t_last]))
+        if st.max_radius > r_hat:
+            st.exceeded_rhat = True
+        st.substring_tuples_probed += int(
+            sched.cum_subtuples[min(t_last + 1, sched.built_steps)]
+        )
+    if scanned:
+        st.fell_back_to_scan = True
+
+
+def _query_substrings(index, q_words):
+    """(q_sub uint32, z_sub int32) substring values/popcounts for a
+    whole (possibly mixed-z) query batch."""
+    q_sub = np.stack(
+        [
+            np.asarray(extract_substring(q_words, t.lo, t.hi))
+            for t in index.tables
+        ],
+        axis=1,
+    ).astype(np.uint32)
+    z_sub = np.bitwise_count(q_sub).astype(np.int32)
+    return q_sub, z_sub
+
+
+class _PendingGroups:
+    """In-flight fused batch probe: the non-blocking half of
+    ``run_groups_device``. Holds the launch handle plus the host-side
+    context ``resolve_groups_device`` needs for extraction."""
+
+    __slots__ = ("q_words", "k", "zs", "gid", "t_stop", "stack", "handle")
+
+    def __init__(self, q_words, k, zs, gid, t_stop, stack, handle):
+        self.q_words = q_words
+        self.k = k
+        self.zs = zs
+        self.gid = gid
+        self.t_stop = t_stop
+        self.stack = stack
+        self.handle = handle
+
+
+def dispatch_groups_device(
+    index,
+    q_words: np.ndarray,
+    k: int,
+    stop_below: Optional[np.ndarray] = None,
+) -> _PendingGroups:
+    """Dispatch ONE fused walk launch for the whole batch — every
+    z-group rides the same ``lax.while_loop`` via its schedule-stack row
+    — and return without blocking. The sharded engine calls this once
+    per device back-to-back (async multi-device dispatch); single-index
+    callers go through ``run_groups_device``."""
+    from ..kernels import ops
+
+    B = q_words.shape[0]
+    csr = index.device_csr
+    widths = csr["widths"]
+    stack = get_schedule_stack(
+        index.p, index.m, widths, index.probe_stream_cap
+    )
+    zs = popcount(q_words)
+    gid = np.empty(B, dtype=np.int32)
+    t_stop = np.empty(B, dtype=np.int32)
+    for z in np.unique(zs):
+        r = stack.row(int(z))
+        sel = zs == z
+        gid[sel] = r
+        sched = stack.scheds[r]
+        if stop_below is None:
+            t_stop[sel] = sched.L - 1
+        else:
+            # snapshot of the live bounds: bounds only ever rise, so a
+            # stale (lower) value is always still a valid lower bound
+            t_stop[sel] = (
+                np.searchsorted(
+                    -sched.sims64, -stop_below[sel], side="right"
+                )
+                - 1
+            ).astype(np.int32)
+    q_sub, z_sub = _query_substrings(index, q_words)
+    pow1, pow0 = _pow_arrays(q_sub, z_sub, widths, csr["wmax"])
+
+    handle = ops.device_probe_walk_batched_launch(
+        q_words,
+        q_sub.astype(np.int32),
+        z_sub,
+        pow1,
+        pow0,
+        gid,
+        t_stop,
+        k,
+        stack=stack,
+        csr=csr,
+        p=index.p,
+        device=index.device,
+        blocking=False,
+    )
+    index.verify_launches += 1
+    return _PendingGroups(q_words, k, zs, gid, t_stop, stack, handle)
+
+
+def resolve_groups_device(index, pending: _PendingGroups, stats,
+                          on_done=None):
+    """Block on a dispatched fused walk, finish any bailed queries with
+    ONE cross-group scan launch, and extract results — the whole batch
+    cost two launches at most. Returns finished ``_QueryState``s with
+    the host loop's result contract (LOCAL ids; float64 sims)."""
+    from .amih import _QueryState
+    from ..kernels import ops
+
+    q_words = pending.q_words
+    k = pending.k
+    stack = pending.stack
+    B = q_words.shape[0]
+    csr = index.device_csr
+    n = csr["n"]
+    res = pending.handle.get()
+    posmap = res["posmap"]
+    scanned = np.zeros(B, dtype=bool)
+    undone = np.flatnonzero(~res["done"])
+    if undone.size:
+        # truncated schedules / budget bails: finish every straggler of
+        # every group with ONE exhaustive verify launch — positions are
+        # exact, so results are unchanged, and the batch total stays at
+        # two launches
+        pm2 = ops.device_probe_scan_multi_launch(
+            np.ascontiguousarray(q_words[undone]),
+            pending.gid[undone],
+            stack=stack,
+            csr=csr,
+            p=index.p,
+            device=index.device,
+        )
+        posmap[undone] = pm2
+        scanned[undone] = True
+        index.verify_launches += 1
+
+    states: List[_QueryState] = []
+    for qi in range(B):
+        sched = stack.scheds[pending.gid[qi]]
+        out_ids, out_pos, out_sims = _extract(
+            posmap[qi, :n], int(pending.t_stop[qi]), n, k, sched.sims64
+        )
+        take = out_ids.size
+        st = None if stats is None else stats[qi]
+        if st is not None:
+            _record_stats(
+                st, sched, posmap[qi, :n], out_pos, take,
+                res["probes"][qi], res["retrieved"][qi],
+                bool(scanned[qi]), rhat(int(pending.zs[qi])),
+            )
+        state = _QueryState(
+            qi=qi,
+            q_words=q_words[qi],
+            q_subs=[],
+            z_subs=[],
+            seen=np.empty(0, dtype=bool),
+            cover=[],
+            pending={},
+            out_ids=out_ids,
+            out_sims=out_sims,
+            stats=st,
+            scanned=bool(scanned[qi]),
+            done=take >= k,
+        )
+        states.append(state)
+        if on_done is not None and state.done:
+            on_done(
+                qi,
+                out_ids + index.id_offset,
+                np.asarray(out_sims, dtype=np.float64),
+            )
+    return states
+
+
 def run_groups_device(
     index,
     q_words: np.ndarray,
@@ -432,10 +822,42 @@ def run_groups_device(
     stop_below: Optional[np.ndarray] = None,
     on_done=None,
 ):
-    """Device-path replacement for ``AMIHIndex._run_groups``: one walk
-    launch (plus at most one scan-fallback launch) per z-group, then host
-    extraction. Returns finished ``_QueryState``s with the same result
-    contract as the host loop (LOCAL ids; float64 sims)."""
+    """Device-path replacement for ``AMIHIndex._run_groups``: ONE fused
+    walk launch (plus at most one scan-fallback launch) for the whole
+    batch, then host extraction. Returns finished ``_QueryState``s with
+    the same result contract as the host loop (LOCAL ids; float64 sims).
+
+    ``index.probe_fused=False`` keeps the PR 6 shape — one walk launch
+    per z-group — as a parity oracle; results are bit-identical."""
+    if not getattr(index, "probe_fused", True):
+        return _run_groups_device_grouped(
+            index, q_words, k, stats, stop_below, on_done
+        )
+    if q_words.shape[0] == 0:
+        return []
+    if np.unique(popcount(q_words)).size == 1:
+        # single z-group (every B=1 call lands here): the stacked
+        # kernel buys nothing over the per-group launch — same ONE walk
+        # launch, but the per-group kernel's smaller operands dispatch
+        # measurably faster at single-query latency. Results identical.
+        return _run_groups_device_grouped(
+            index, q_words, k, stats, stop_below, on_done
+        )
+    pending = dispatch_groups_device(index, q_words, k, stop_below)
+    return resolve_groups_device(index, pending, stats, on_done=on_done)
+
+
+def _run_groups_device_grouped(
+    index,
+    q_words: np.ndarray,
+    k: int,
+    stats,
+    stop_below: Optional[np.ndarray] = None,
+    on_done=None,
+):
+    """The PR 6 per-z-group device path (one walk launch per z-group):
+    kept as the fused path's parity oracle and the
+    ``probe_fused=False`` escape hatch."""
     from .amih import _QueryState
     from ..kernels import ops
 
@@ -456,14 +878,7 @@ def run_groups_device(
         )
         Bg = len(qis)
         q_grp = np.ascontiguousarray(q_words[qis])
-        q_sub = np.stack(
-            [
-                np.asarray(extract_substring(q_grp, t.lo, t.hi))
-                for t in index.tables
-            ],
-            axis=1,
-        ).astype(np.uint32)
-        z_sub = np.bitwise_count(q_sub).astype(np.int32)
+        q_sub, z_sub = _query_substrings(index, q_grp)
         pow1, pow0 = _pow_arrays(q_sub, z_sub, widths, wmax)
         if stop_below is None:
             t_stop = np.full(Bg, sched.L - 1, dtype=np.int32)
@@ -515,42 +930,17 @@ def run_groups_device(
         r_hat = rhat(z)
         for gi, qi in enumerate(qis):
             pm = posmap[gi, :n]
-            ts = int(t_stop[gi])
-            # work on the found subset only: the full-width (n,) compare
-            # is one cheap pass, everything after is O(cnt log cnt)
-            idx = np.flatnonzero(pm <= ts)
-            cnt = idx.size
-            take = min(k, cnt)
-            if take > 0:
-                pos_f = pm[idx].astype(np.int64)
-                order = np.argsort(pos_f * n + idx)[:take]
-                out_ids = idx[order].astype(np.int64)
-                out_pos = pos_f[order]
-                out_sims = sched.sims64[out_pos]
-            else:
-                out_ids = _EMPTY_I64
-                out_pos = _EMPTY_I64
-                out_sims = np.empty(0, dtype=np.float64)
+            out_ids, out_pos, out_sims = _extract(
+                pm, int(t_stop[gi]), n, k, sched.sims64
+            )
+            take = out_ids.size
             st = None if stats is None else stats[qi]
             if st is not None:
-                st.probes += int(res["probes"][gi])
-                st.retrieved += int(res["retrieved"][gi])
-                st.verified += int((pm != POS_INF).sum())
-                t_last = int(out_pos[-1]) if take else -1
-                st.tuples_processed += t_last + 1
-                if t_last >= 0:
-                    st.max_radius = max(
-                        st.max_radius, int(sched.cum_maxrad[t_last])
-                    )
-                    if st.max_radius > r_hat:
-                        st.exceeded_rhat = True
-                    st.substring_tuples_probed += int(
-                        sched.cum_subtuples[
-                            min(t_last + 1, sched.built_steps)
-                        ]
-                    )
-                if scanned[gi]:
-                    st.fell_back_to_scan = True
+                _record_stats(
+                    st, sched, pm, out_pos, take,
+                    res["probes"][gi], res["retrieved"][gi],
+                    bool(scanned[gi]), r_hat,
+                )
             state = _QueryState(
                 qi=qi,
                 q_words=q_words[qi],

@@ -41,6 +41,7 @@ __all__ = [
     "shared_probing_iter",
     "probing_cache_clear",
     "probing_cache_info",
+    "probing_cache_stats",
 ]
 
 
@@ -151,17 +152,25 @@ class _SeqEntry:
 _SEQ_CACHE: "OrderedDict[Tuple[int, int], _SeqEntry]" = OrderedDict()
 _SEQ_CACHE_MAX = 64
 _SEQ_LOCK = threading.RLock()
+# process-lifetime hit/miss counters (see probing_cache_stats): a miss is
+# one (p, z) enumeration from scratch, so hits/(hits+misses) is the share
+# of probing-sequence work the cache absorbed
+_SEQ_HITS = 0
+_SEQ_MISSES = 0
 
 
 def _seq_entry(p: int, z: int) -> _SeqEntry:
     """The shared cache entry for (p, z) (LRU-touched; caller need not hold
     the lock — entry internals are guarded separately)."""
+    global _SEQ_HITS, _SEQ_MISSES
     with _SEQ_LOCK:
         entry = _SEQ_CACHE.get((p, z))
         if entry is None:
+            _SEQ_MISSES += 1
             entry = _SeqEntry(p, z)
             _SEQ_CACHE[(p, z)] = entry
         else:
+            _SEQ_HITS += 1
             _SEQ_CACHE.move_to_end((p, z))
         while len(_SEQ_CACHE) > _SEQ_CACHE_MAX:
             _SEQ_CACHE.popitem(last=False)
@@ -209,3 +218,18 @@ def probing_cache_info() -> Tuple[int, int]:
             len(_SEQ_CACHE),
             sum(len(e.prefix) for e in _SEQ_CACHE.values()),
         )
+
+
+def probing_cache_stats() -> dict:
+    """Occupancy plus process-lifetime hit/miss counters of the shared
+    (p, z) sequence cache — surfaced through ``EngineStats.cache_info``
+    and the benchmark rows so cache effectiveness is visible per cell."""
+    with _SEQ_LOCK:
+        return {
+            "probing_entries": len(_SEQ_CACHE),
+            "probing_tuples": sum(
+                len(e.prefix) for e in _SEQ_CACHE.values()
+            ),
+            "probing_hits": _SEQ_HITS,
+            "probing_misses": _SEQ_MISSES,
+        }

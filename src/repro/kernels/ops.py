@@ -27,8 +27,11 @@ __all__ = [
     "LAUNCH_COUNTS",
     "LAUNCH_COUNTS_BY_DEVICE",
     "PendingKeys",
+    "PendingWalk",
     "device_key",
     "device_probe_scan_launch",
+    "device_probe_scan_multi_launch",
+    "device_probe_walk_batched_launch",
     "device_probe_walk_launch",
     "merge_topk",
     "on_tpu",
@@ -356,8 +359,23 @@ def _gather_verify_grouped_for(device):
     return fn
 
 
+def _device_fn(device, name: str, make):
+    """Per-device jit instance registry shared with the grouped verify:
+    one jitted callable per (device, op) pair, keyed ``"<dkey>::<op>"``
+    in ``_DEVICE_JITS``, created on first use and reused for the process
+    lifetime — sustained serving never rebuilds a jit wrapper per batch."""
+    key = f"{device_key(device)}::{name}"
+    with _LAUNCH_LOCK:
+        fn = _DEVICE_JITS.get(key)
+        if fn is None:
+            fn = make()
+            _DEVICE_JITS[key] = fn
+    return fn
+
+
 def device_jit_cache_info() -> Tuple[str, ...]:
-    """Device keys that have a compiled grouped-verify cache (testing)."""
+    """Device keys that have a compiled grouped-verify cache (testing).
+    Per-device probe-walk instances appear as ``"<dkey>::<op>"``."""
     return tuple(sorted(_DEVICE_JITS))
 
 
@@ -620,6 +638,265 @@ def device_probe_scan_launch(
         csr["db_pad"],
         bundle["inv_pos"],
         per_call[1],
+        p=p,
+        chunk=chunk,
+        use_pallas=use_pallas,
+        interpret=not on_tpu(),
+    )
+    return np.asarray(pm)[:B]
+
+
+# Recycled (B_pad, n_pad) position-map scratch buffers, per placement
+# device: the fused batch walk donates its scratch input, so on backends
+# that honor donation (TPU/GPU) sustained serving reuses ONE buffer per
+# (device, batch-bucket, index) instead of allocating 4*B*n_pad bytes
+# every query batch. Keyed (device_key, B_pad, n_pad); small cap so odd
+# one-off batch shapes don't pin memory forever.
+_POSMAP_POOL: dict = {}
+_POSMAP_POOL_MAX = 2
+
+
+def _take_posmap(device, Bp: int, n_pad: int):
+    key = (device_key(device), Bp, n_pad)
+    with _LAUNCH_LOCK:
+        pool = _POSMAP_POOL.get(key)
+        if pool:
+            return key, pool.pop()
+    buf = np.zeros((Bp, n_pad), dtype=np.int32)
+    arr = jax.device_put(buf, device) if device is not None else (
+        jnp.asarray(buf)
+    )
+    return key, arr
+
+
+def _recycle_posmap(key, arr) -> None:
+    with _LAUNCH_LOCK:
+        pool = _POSMAP_POOL.setdefault(key, [])
+        if len(pool) < _POSMAP_POOL_MAX:
+            pool.append(arr)
+
+
+class PendingWalk:
+    """Handle for an in-flight fused batch-walk launch.
+
+    Like ``PendingKeys``, holds the device output arrays without forcing
+    a host sync, so the sharded engine can dispatch every device's fused
+    launch back-to-back and only block at the final merge. ``get()``
+    materializes the host result dict (posmap is force-copied before the
+    output buffer is recycled into the donation pool — on CPU jax a
+    plain ``np.asarray`` may alias the device buffer the next launch
+    would overwrite)."""
+
+    __slots__ = ("_out", "_B", "_pool_key", "_res")
+
+    def __init__(self, out, B: int, pool_key):
+        self._out = out
+        self._B = B
+        self._pool_key = pool_key
+        self._res = None
+
+    def get(self) -> dict:
+        if self._res is None:
+            posmap, probes, retrieved, done, cursor, iters = self._out
+            self._res = {
+                "posmap": np.array(posmap)[: self._B],
+                "probes": np.asarray(probes)[: self._B],
+                "retrieved": np.asarray(retrieved)[: self._B],
+                "done": np.asarray(done)[: self._B],
+                "cursor": np.asarray(cursor),
+                "iters": int(iters),
+            }
+            _recycle_posmap(self._pool_key, posmap)
+            self._out = None
+        return self._res
+
+
+def device_probe_walk_batched_launch(
+    q_words,
+    q_sub,
+    z_sub,
+    pow1,
+    pow0,
+    gid,
+    t_stop,
+    k: int,
+    *,
+    stack,
+    csr,
+    p: int,
+    device=None,
+    use_pallas: bool | None = None,
+    tile: int | None = None,
+    cap: int | None = None,
+    check_every: int | None = None,
+    walk_budget: int | None = None,
+    blocking: bool = True,
+) -> "dict | PendingWalk":
+    """Dispatch the fused cross-z-group walk: ONE launch for the whole
+    batch, every z-group included.
+
+    ``stack`` is a ``repro.core.probe_device.ScheduleStack`` (the grow-
+    only concatenation of the index's per-z schedules) and ``gid`` maps
+    each query to its stack row; everything else matches
+    ``device_probe_walk_launch``. With ``blocking=False`` returns a
+    ``PendingWalk`` handle instead of synchronizing — the sharded
+    engine's async multi-device dispatch. The (B_pad, n_pad) position-
+    map scratch is drawn from (and recycled to) a per-device donation
+    pool, so steady-state serving allocates nothing per batch on
+    backends that honor ``donate_argnames``."""
+    from ..core.probe_device import (
+        DEFAULT_CHECK_EVERY,
+        DEFAULT_PROBE_CAP,
+        DEFAULT_TILE,
+        KMAX,
+    )
+    from . import device_probe
+
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    tile = DEFAULT_TILE if tile is None else tile
+    if tile > DEFAULT_TILE:
+        raise ValueError(
+            f"tile={tile} exceeds the schedule pad margin {DEFAULT_TILE}"
+        )
+    cap = pad_bucket(DEFAULT_PROBE_CAP if cap is None else cap, minimum=8)
+    check_every = (
+        DEFAULT_CHECK_EVERY if check_every is None else max(1, check_every)
+    )
+    qh = np.ascontiguousarray(np.asarray(q_words))
+    B = qh.shape[0]
+    Bp = pad_bucket(B, minimum=1)
+    if walk_budget is None:
+        # an iteration of the fused walk probes a tile for EVERY query,
+        # so it costs ~Bp x the per-group iteration while the bail scan
+        # still covers only the undone subset. Scale the per-group
+        # crossover down by the batch width: past it, a few stragglers
+        # grinding the whole batch width cost more than one exhaustive
+        # scan over just those stragglers. At Bp=1 this is exactly the
+        # per-group budget; results are identical either way — bailed
+        # queries resolve exactly through the scan launch.
+        walk_budget = max(4, int(csr["n_pad"]) // (4 * cap * Bp))
+
+    def pad_rows(a, fill=0):
+        a = np.asarray(a)
+        out = np.full((Bp,) + a.shape[1:], fill, dtype=a.dtype)
+        out[:B] = a
+        return out
+
+    # padded query rows: gid 0 (a real stack row) with t_stop = -1 —
+    # born done, never probed, never block the done check
+    per_call = _probe_put(
+        [
+            pad_rows(qh),
+            pad_rows(np.asarray(q_sub, dtype=np.int32)),
+            pad_rows(np.asarray(z_sub, dtype=np.int32)),
+            pad_rows(np.asarray(pow1, dtype=np.int32)),
+            pad_rows(np.asarray(pow0, dtype=np.int32)),
+            pad_rows(np.asarray(gid, dtype=np.int32)),
+            pad_rows(np.asarray(t_stop, dtype=np.int32), fill=-1),
+            np.int32(k),
+            np.int32(walk_budget),
+        ],
+        device,
+    )
+    bundle = stack.device_arrays(device)
+    pool_key, posmap_in = _take_posmap(device, Bp, int(csr["n_pad"]))
+    dkey = device_key(device)
+    with _LAUNCH_LOCK:
+        LAUNCH_COUNTS["device_probe"] += 1
+        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
+            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+        )
+    fn = _device_fn(
+        device,
+        "walk_batched",
+        lambda: jax.jit(
+            device_probe.device_probe_walk_batched,
+            static_argnames=(
+                "p", "tile", "cap", "kmax", "check_every",
+                "use_pallas", "interpret",
+            ),
+            donate_argnames=("posmap_in",),
+        ),
+    )
+    out = fn(
+        posmap_in,
+        *per_call,
+        bundle["g_start"],
+        bundle["g_end"],
+        bundle["tbl"],
+        bundle["step"],
+        bundle["idx1"],
+        bundle["idx0"],
+        bundle["maxi1"],
+        bundle["maxi0"],
+        bundle["widths"],
+        csr["offsets"],
+        csr["ids"],
+        csr["db_pad"],
+        bundle["inv_pos"],
+        p=p,
+        tile=tile,
+        cap=cap,
+        kmax=KMAX,
+        check_every=check_every,
+        use_pallas=use_pallas,
+        interpret=not on_tpu(),
+    )
+    pending = PendingWalk(out, B, pool_key)
+    return pending.get() if blocking else pending
+
+
+def device_probe_scan_multi_launch(
+    q_words,
+    gid,
+    *,
+    stack,
+    csr,
+    p: int,
+    device=None,
+    use_pallas: bool | None = None,
+    chunk: int = 2048,
+) -> np.ndarray:
+    """One exhaustive verify launch across EVERY bailed z-group: the
+    fused form of ``device_probe_scan_launch`` with a per-query ``gid``
+    row into the stack's inverse-position tables. Returns a host
+    (B, n_pad) int32 position map."""
+    from . import device_probe
+
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    qh = np.ascontiguousarray(np.asarray(q_words))
+    B = qh.shape[0]
+    Bp = pad_bucket(B, minimum=1)
+    qp = np.zeros((Bp,) + qh.shape[1:], dtype=qh.dtype)
+    qp[:B] = qh
+    gp = np.zeros(Bp, dtype=np.int32)
+    gp[:B] = np.asarray(gid, dtype=np.int32)
+    n_pad = csr["n_pad"]
+    chunk = min(pad_bucket(chunk, minimum=8), n_pad)
+    per_call = _probe_put([qp, gp, np.int32(csr["n"])], device)
+    bundle = stack.device_arrays(device)
+    dkey = device_key(device)
+    with _LAUNCH_LOCK:
+        LAUNCH_COUNTS["device_probe_scan"] += 1
+        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
+            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+        )
+    fn = _device_fn(
+        device,
+        "scan_multi",
+        lambda: jax.jit(
+            device_probe.device_probe_scan_multi,
+            static_argnames=("p", "chunk", "use_pallas", "interpret"),
+        ),
+    )
+    pm = fn(
+        per_call[0],
+        per_call[1],
+        csr["db_pad"],
+        bundle["inv_pos"],
+        per_call[2],
         p=p,
         chunk=chunk,
         use_pallas=use_pallas,

@@ -8,6 +8,14 @@ results while later steps are still in flight. This is the serving loop
 of ``RetrievalService.run_queued(stream=True)``; the serving benchmark
 drives it directly over pre-packed codes (identity encode).
 
+The overlap compounds with the device probe path's async multi-device
+dispatch: a sharded engine with ``probe_backend="device"`` issues ONE
+fused walk launch per device without blocking (shard.engines
+``_probe_device_fused``), so while every device probes step ``i``, the
+search worker is only busy for the O(K) extraction tail and the encode
+worker is already packing step ``i+1`` — three overlapping stages from
+two threads plus the devices themselves.
+
 ``Ticket`` is the handle ``RetrievalService.submit`` returns: an
 int-compatible query id (old callers that used the qid as a dict key
 keep working unchanged) carrying a ``concurrent.futures.Future`` that

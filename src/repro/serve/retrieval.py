@@ -65,12 +65,16 @@ class RetrievalConfig:
     # (B_g, C_max, W) layout; DB stays device-resident from build).
     verify_backend: str = "numpy"
     # AMIH probing walk: "host" (the reference per-tuple Python walk) or
-    # "device" (the fused probe -> bucket-lookup -> verify jitted launch,
-    # one per z-group; see core.probe_device). Applies to "amih" and
-    # "sharded_amih"; probe_stream_cap bounds the precompiled probing
-    # stream per (p, z) schedule before the scan fallback takes over.
+    # "device" (the fused probe -> bucket-lookup -> verify jitted launch;
+    # see core.probe_device). Applies to "amih" and "sharded_amih";
+    # probe_stream_cap bounds the precompiled probing stream per (p, z)
+    # schedule before the scan fallback takes over. probe_fused (default)
+    # stacks every z-group into ONE launch per batch — and, sharded, one
+    # fused launch per DEVICE, dispatched to all devices without blocking
+    # — False restores the per-z-group launches as a parity oracle.
     probe_backend: str = "host"
     probe_stream_cap: int = 1 << 16
+    probe_fused: bool = True
     # linear_scan scoring: "numpy" (chunked host popcounts) or "pallas"
     # (streaming device top-K via kernels/ops.scan_topk + exact float64
     # host rerank).
@@ -235,6 +239,7 @@ class RetrievalService:
                 "overlap_verify": self.rcfg.pipelined,
                 "probe_backend": self.rcfg.probe_backend,
                 "probe_stream_cap": self.rcfg.probe_stream_cap,
+                "probe_fused": self.rcfg.probe_fused,
             }
         elif self.rcfg.backend == "linear_scan":
             cfg = {"compute_backend": self.rcfg.compute_backend}
@@ -252,6 +257,7 @@ class RetrievalService:
                 "probe_mode": self.rcfg.probe_mode,
                 "probe_backend": self.rcfg.probe_backend,
                 "probe_stream_cap": self.rcfg.probe_stream_cap,
+                "probe_fused": self.rcfg.probe_fused,
             }
         self.engine = make_engine(
             self.rcfg.backend, self.db_words, self.rcfg.code_bits, **cfg

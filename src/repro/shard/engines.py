@@ -42,7 +42,12 @@ from typing import Any, Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.amih import AMIHIndex, AMIHStats
-from ..core.engine import EngineStats, SearchEngine, register_engine
+from ..core.engine import (
+    EngineStats,
+    SearchEngine,
+    probe_cache_snapshot,
+    register_engine,
+)
 from ..core.linear_scan import sims_for_ids
 from ..core.packing import WORD_DTYPE
 from ..core.single_table import SearchStats
@@ -299,10 +304,20 @@ class ShardedAMIHEngine(SearchEngine):
     them; GC does too).
 
     ``probe_backend="device"`` builds every shard index with the fused
-    device probing walk (see core.probe_device): each shard answers in
-    one jitted launch per z-group, so the host probe pool stands down
-    entirely — no workers ever fork — and ``stats.per_shard`` records
-    the backend next to the shard's device.
+    device probing walk (see core.probe_device), so the host probe pool
+    stands down entirely — no workers ever fork. With ``probe_fused``
+    (the default) the engine goes further and collapses the launch count
+    to O(devices): the shards resident on each device are stacked into
+    one per-device *super index* (concatenated rows + rebuilt CSR, local
+    rows mapped back to global ids at extraction), every device's fused
+    batch walk is dispatched WITHOUT blocking, and the host only syncs
+    at the final O(K) merge — device-parallel probing that overlaps the
+    next step's host-side encode in ``pipeline/stream.py``. Since the
+    walk is shared, ``stats.per_shard[s]`` records the shared
+    ``launch_id`` it participated in, the per-device launch count on the
+    device group's LEAD shard, and 0 on the riders — summing
+    ``launches`` over shards equals real dispatches, so serving
+    dashboards don't over-count.
     """
 
     name = "sharded_amih"
@@ -329,7 +344,8 @@ class ShardedAMIHEngine(SearchEngine):
                  probe_workers: Optional[int] = None,
                  prime_bound: bool = True,
                  probe_mode: str = "auto",
-                 probe_backend: str = "host"):
+                 probe_backend: str = "host",
+                 probe_fused: bool = True):
         self.db_words = np.ascontiguousarray(db_words, dtype=WORD_DTYPE)
         self.p = p
         self.plan = plan
@@ -339,6 +355,9 @@ class ShardedAMIHEngine(SearchEngine):
         self.prime_bound = prime_bound
         self.probe_mode = probe_mode
         self.probe_backend = probe_backend
+        self.probe_fused = probe_fused
+        self._fused = None          # per-device super-index groups, lazy
+        self._fused_seq = 0         # shared launch-id counter (S6)
         self._pool = None           # PersistentShardPool, forked on first use
         self._closed = False
         # guards _pool/_closed: a knn_batch racing close() must not
@@ -362,6 +381,7 @@ class ShardedAMIHEngine(SearchEngine):
         probe_mode: str = "auto",
         probe_backend: str = "host",
         probe_stream_cap: int = 1 << 16,
+        probe_fused: bool = True,
         devices=None,
         **cfg: Any,
     ) -> "ShardedAMIHEngine":
@@ -383,9 +403,11 @@ class ShardedAMIHEngine(SearchEngine):
                 device=plan.device_for(s),
                 probe_backend=probe_backend,
                 probe_stream_cap=probe_stream_cap,
+                probe_fused=probe_fused,
             )))
         return cls(db, p, plan, indexes, enumeration_cap,
-                   probe_workers, prime_bound, probe_mode, probe_backend)
+                   probe_workers, prime_bound, probe_mode, probe_backend,
+                   probe_fused)
 
     @property
     def n(self) -> int:
@@ -441,7 +463,11 @@ class ShardedAMIHEngine(SearchEngine):
                             per_query=per_query,
                             shards=self.plan.num_shards),
             )
-        if self._use_parallel(B):
+        fuse_meta: Optional[Dict[int, Dict[str, Any]]] = None
+        groups = self._fused_groups()
+        if groups is not None:
+            shard_out, fuse_meta = self._probe_device_fused(q, k_eff, groups)
+        elif self._use_parallel(B):
             shard_out = self._probe_parallel(q, k_eff)
         else:
             shard_out = self._probe_sequential(q, k_eff)
@@ -477,6 +503,12 @@ class ShardedAMIHEngine(SearchEngine):
                 agg[counter] = sum(
                     int(getattr(st, counter)) for st in shard_stats
                 )
+            if fuse_meta is not None:
+                # fused device path: every shard of a device group shares
+                # one launch id; only the group's lead shard carries the
+                # launch count and device-level counters, so summing
+                # ``launches`` across shards equals real dispatches
+                agg.update(fuse_meta.get(s, {}))
             per_shard.append(agg)
 
         ids_out = np.empty((B, k_eff), dtype=np.int64)
@@ -492,8 +524,153 @@ class ShardedAMIHEngine(SearchEngine):
         stats = EngineStats(
             backend=self.name, queries=B, per_query=per_query,
             shards=self.plan.num_shards, per_shard=per_shard,
+            cache_info=probe_cache_snapshot(),
         )
         return ids_out, sims_out, stats
+
+    def _fused_groups(self):
+        """Per-device super-index groups for the fused device path,
+        built lazily on first use and cached for the engine lifetime.
+
+        Returns None — and the caller falls back to the sequential
+        chain — unless every shard index runs ``probe_backend="device"``
+        with ``probe_fused`` and all shards agree on (m, stream cap), so
+        a mixed or per-shard-tuned layout never silently changes shape.
+
+        Each group stacks the shards resident on ONE device: a
+        single-shard group reuses that shard's index outright; a
+        multi-shard group builds a hidden *super index* over the
+        concatenated row slices (local ids, ``id_offset=0``) with a
+        ``row_to_gid`` map and shard ``edges`` for attribution. Because
+        the plan hands out contiguous ascending row ranges in shard
+        order, concat-row order equals global-id order within the
+        device, so extraction order — hence the final lexsort merge —
+        is bit-identical to the sequential per-shard path."""
+        if (
+            self.probe_backend != "device"
+            or not self.probe_fused
+            or not self.indexes
+        ):
+            return None
+        if self._fused is not None:
+            return self._fused
+        from ..kernels import ops
+
+        if (
+            len({ix.m for _, ix in self.indexes}) > 1
+            or len({ix.probe_stream_cap for _, ix in self.indexes}) > 1
+            or not all(ix.probe_fused for _, ix in self.indexes)
+            or not all(
+                ix.probe_backend == "device" for _, ix in self.indexes
+            )
+        ):
+            return None
+        by_dev: Dict[str, Dict[str, Any]] = {}
+        order: List[Dict[str, Any]] = []
+        for s, ix in self.indexes:
+            dkey = ops.device_key(ix.device)
+            g = by_dev.get(dkey)
+            if g is None:
+                g = {"dkey": dkey, "device": ix.device, "shards": []}
+                by_dev[dkey] = g
+                order.append(g)
+            g["shards"].append((s, ix))
+        for g in order:
+            shards = g["shards"]
+            if len(shards) == 1:
+                g["super"] = shards[0][1]
+                g["row_to_gid"] = None
+            else:
+                db = np.concatenate([ix.db_words for _, ix in shards])
+                g["super"] = AMIHIndex.build(
+                    db, self.p, m=shards[0][1].m,
+                    device=g["device"], probe_backend="device",
+                    probe_stream_cap=shards[0][1].probe_stream_cap,
+                )
+                g["row_to_gid"] = np.concatenate([
+                    np.arange(ix.n, dtype=np.int64) + ix.id_offset
+                    for _, ix in shards
+                ])
+            g["edges"] = np.cumsum(
+                [ix.n for _, ix in shards]
+            ).astype(np.int64)
+        self._fused = order
+        return order
+
+    def _probe_device_fused(self, q, k_eff, groups):
+        """One fused walk launch per DEVICE: dispatch every device group
+        back-to-back without blocking, then resolve them in turn — the
+        host only syncs per device at extraction time, so all devices
+        probe concurrently. ``prime_bound`` warm-starts every group with
+        the exact k-th sim of a deterministic row sample (each group is
+        probed independently, so no cross-shard bound chaining exists to
+        lean on). Returns (shard_out, fuse_meta): per-shard result lists
+        split out of each device's super index, stats and launch counts
+        attributed to the group's lead shard (S6)."""
+        from ..core import probe_device
+        from ..pipeline.shardpool import prime_ids
+
+        B = q.shape[0]
+        bounds = None
+        if self.prime_bound:
+            sample = prime_ids(self.n, k_eff)
+            if sample.size >= k_eff:
+                cut = sample.size - k_eff
+                bounds = np.empty(B, dtype=np.float64)
+                for i in range(B):
+                    sims_i = sims_for_ids(q[i], self.db_words, sample)
+                    bounds[i] = np.partition(sims_i, cut)[cut]
+        pend = []
+        for g in groups:
+            sup = g["super"]
+            pend.append((
+                sup.verify_launches,
+                probe_device.dispatch_groups_device(
+                    sup, q, min(k_eff, sup.n), stop_below=bounds
+                ),
+            ))
+        shard_out: Dict[int, Tuple[list, list, int]] = {}
+        fuse_meta: Dict[int, Dict[str, Any]] = {}
+        for g, (l0, pending) in zip(groups, pend):
+            sup = g["super"]
+            dstats = [AMIHStats() for _ in range(B)]
+            states = probe_device.resolve_groups_device(
+                sup, pending, dstats
+            )
+            launches = sup.verify_launches - l0
+            shards = g["shards"]
+            lead_ix = shards[0][1]
+            if len(shards) > 1:
+                # the hidden super index did the probing; surface its
+                # launches on the lead shard's index so process-wide
+                # counters that sum engine.indexes stay truthful
+                lead_ix.verify_launches += launches
+            self._fused_seq += 1
+            lid = f"fused:{g['dkey']}#{self._fused_seq}"
+            res_by: List[List[Any]] = [[None] * B for _ in shards]
+            for st in states:           # states arrive qi-ordered
+                rows = st.out_ids
+                sims = np.asarray(st.out_sims, dtype=np.float64)
+                if g["row_to_gid"] is None:
+                    owner = np.zeros(rows.size, dtype=np.int64)
+                    gids = rows + lead_ix.id_offset
+                else:
+                    owner = np.searchsorted(g["edges"], rows, side="right")
+                    gids = g["row_to_gid"][rows]
+                for j in range(len(shards)):
+                    sel = owner == j
+                    res_by[j][st.qi] = (gids[sel], sims[sel])
+            for j, (s, _ix) in enumerate(shards):
+                stats_j = dstats if j == 0 else [
+                    AMIHStats() for _ in range(B)
+                ]
+                shard_out[s] = (res_by[j], stats_j,
+                                launches if j == 0 else 0)
+                fuse_meta[s] = {
+                    "launch_id": lid,
+                    "fused_shards": len(shards),
+                }
+        return shard_out, fuse_meta
 
     def _probe_sequential(self, q, k_eff):
         """PR 3's chain: shards probed one after another, each next shard

@@ -3,7 +3,9 @@
 The fused probe -> bucket-lookup -> verify launch must be bit-identical
 to the host reference walk (ids AND sims) and exact vs linear scan (sims
 up to in-tuple ties), across every entry point that can select it, in
-O(1) jitted launches per z-group.
+ONE walk launch per batch: every z-group rides the same schedule-stack
+row of one ``lax.while_loop`` (``probe_fused=False`` keeps the PR 6
+one-launch-per-z-group shape as the parity oracle).
 """
 
 import numpy as np
@@ -130,18 +132,90 @@ def test_bounded_path_matches_host():
 
 
 # -------------------------------------------------------- launch economy
-def test_one_walk_launch_per_z_group():
+def test_one_walk_launch_per_batch():
     p, n, k = 64, 2000, 5
     db, q = _make_data(n, p, 32, seed=9, clustered=True)
     dev = AMIHIndex.build(db, p, probe_backend="device")
     groups = len(np.unique(np.bitwise_count(q).sum(axis=1)))
+    assert groups > 1             # the fusion must actually fuse something
     walk0 = ops.LAUNCH_COUNTS["device_probe"]
     scan0 = ops.LAUNCH_COUNTS["device_probe_scan"]
     dev.knn_batch(q, k)
+    assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 1
+    # the cross-group scan fallback fires at most ONCE for the whole
+    # batch (covering only bailed queries): O(1) launches per batch total
+    assert ops.LAUNCH_COUNTS["device_probe_scan"] - scan0 <= 1
+    # the PR 6 per-z-group shape survives behind probe_fused=False
+    grouped = AMIHIndex.build(db, p, probe_backend="device",
+                              probe_fused=False)
+    walk0 = ops.LAUNCH_COUNTS["device_probe"]
+    grouped.knn_batch(q, k)
     assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == groups
-    # the scan fallback fires at most once per group (truncated streams
-    # only): the whole batch is O(1) launches per z-group, not O(probes)
-    assert ops.LAUNCH_COUNTS["device_probe_scan"] - scan0 <= groups
+
+
+@pytest.mark.parametrize("p,B", [(32, 1), (32, 8), (64, 8), (64, 64),
+                                 (128, 8)])
+def test_fused_batch_parity_and_single_launch(p, B):
+    """Mixed-z batches: the fused walk is ONE launch per batch and
+    bit-identical (ids AND sims) to both the host walk and the PR 6
+    per-z-group device path."""
+    n, k = 600, 7
+    db, q = _make_data(n, p, B, seed=p + 2 * B)
+    host = AMIHIndex.build(db, p, probe_backend="host")
+    fused = AMIHIndex.build(db, p, probe_backend="device")
+    grouped = AMIHIndex.build(db, p, probe_backend="device",
+                              probe_fused=False)
+    walk0 = ops.LAUNCH_COUNTS["device_probe"]
+    scan0 = ops.LAUNCH_COUNTS["device_probe_scan"]
+    if_, sf = fused.knn_batch(q, k)
+    assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 1
+    assert ops.LAUNCH_COUNTS["device_probe_scan"] - scan0 <= 1
+    ih, sh = host.knn_batch(q, k)
+    ig, sg = grouped.knn_batch(q, k)
+    np.testing.assert_array_equal(ih, if_)
+    np.testing.assert_array_equal(sh, sf)
+    np.testing.assert_array_equal(ig, if_)
+    np.testing.assert_array_equal(sg, sf)
+    _check_vs_scan(q, db, if_, sf, k)
+
+
+def test_batched_trace_counts_bounded():
+    """Varying z-histograms across batches must NOT retrace the fused
+    kernels: the schedule stack pads its group count and stream length
+    to power-of-two buckets, so once a set of z values is resident, any
+    mix of them traces nothing new."""
+    from repro.kernels import device_probe
+
+    p, n, k = 64, 800, 5
+    db, _ = _make_data(n, p, 1, seed=23)
+    dev = AMIHIndex.build(db, p, probe_backend="device")
+    rng = np.random.default_rng(29)
+    support = [28, 30, 32, 34, 36]
+
+    def batch_with_zs(zs):
+        bits = np.zeros((len(zs), p), dtype=np.uint8)
+        for i, z in enumerate(zs):
+            bits[i, rng.choice(p, size=z, replace=False)] = 1
+        return pack_bits(bits)
+
+    # warmup: every z of the support enters the stack; this call pays
+    # the trace (and any stack growth / commit)
+    dev.knn_batch(batch_with_zs(support + support[:3]), k)
+    before = dict(device_probe.TRACE_COUNTS)
+    for seed in range(5):
+        r = np.random.default_rng(100 + seed)
+        # a different histogram over the SAME support each batch
+        zs = r.choice(support, size=8, p=np.roll(
+            [0.4, 0.3, 0.15, 0.1, 0.05], seed
+        ))
+        dev.knn_batch(batch_with_zs(zs), k)
+    after = dict(device_probe.TRACE_COUNTS)
+    assert after["device_probe_walk_batched"] == \
+        before["device_probe_walk_batched"]
+    # the scan fallback pads the BAILED subset to a power-of-two bucket,
+    # so at most log2(B) distinct shapes can ever trace
+    assert after["device_probe_scan_multi"] - \
+        before["device_probe_scan_multi"] <= 3
 
 
 def test_schedule_cache_shared_across_indexes():

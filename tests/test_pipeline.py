@@ -7,6 +7,7 @@ returns worse than the exact k-th cosine; the StagedExecutor pipelines in
 order; ``RetrievalService.submit`` is thread-safe and streaming serving
 resolves tickets with latency counters."""
 
+import multiprocessing
 import time
 
 import numpy as np
@@ -37,6 +38,17 @@ def _force_pool(eng):
     eng.PARALLEL_MIN_CPUS = 0
     eng.PARALLEL_MIN_BATCH = 0
     return eng
+
+
+@pytest.fixture(autouse=True)
+def _at_least_two_cpus(monkeypatch):
+    """The pool caps its worker count at ``cpu_count()``, so on a 1-CPU
+    host it would (correctly) collapse to the inline path and the fork-
+    lifecycle assertions below would never see a worker. Floor the count
+    at 2 for this module so the fork machinery is exercised everywhere
+    the suite runs."""
+    if multiprocessing.cpu_count() < 2:
+        monkeypatch.setattr(multiprocessing, "cpu_count", lambda: 2)
 
 
 def _pipelined_engine(backend, db, p):

@@ -321,6 +321,57 @@ def test_sharded_amih_uneven_device_counts_mesh():
     """)
 
 
+def test_sharded_amih_fused_one_launch_per_device():
+    """PR 7 tentpole on 8 fake devices: 16 shards, 2 per device, fuse
+    into ONE walk launch per device per batch (each device's two shards
+    stacked into a super index), per-device launch counters move by
+    exactly the fused dispatches, stats attribute the shared launch to
+    the group's lead shard only, and results stay exact."""
+    _run("""
+        from repro.core import make_engine, linear_scan_knn, pack_bits
+        from repro.data import synthetic_binary_codes, synthetic_queries
+        from repro.kernels import ops
+
+        p, n, B, k = 64, 4000, 16, 5
+        db_bits = synthetic_binary_codes(n, p, seed=4)
+        db = pack_bits(db_bits)
+        qs = pack_bits(synthetic_queries(db_bits, B, seed=5))
+        eng = make_engine("sharded_amih", db, p, num_shards=16,
+                          probe_backend="device")
+        assert len({str(d) for d in eng.plan.devices}) == 8
+        before = dict(ops.LAUNCH_COUNTS_BY_DEVICE)
+        walk0 = ops.LAUNCH_COUNTS["device_probe"]
+        ids, sims, st = eng.knn_batch(qs, k)
+        # ONE fused walk launch per device, not one per shard
+        assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 8
+        delta = {d: c - before.get(d, 0)
+                 for d, c in ops.LAUNCH_COUNTS_BY_DEVICE.items()}
+        active = {d for d, c in delta.items() if c > 0}
+        assert len(active) == 8 and "default" not in active, delta
+        # walk (+ at most one scan-fallback) per device
+        assert all(1 <= delta[d] <= 2 for d in active), delta
+        # S6 attribution: every shard reports the shared per-device
+        # launch id; only the lead shard of each device group carries
+        # the launch count, so the sum equals real dispatches
+        lids = [d["launch_id"] for d in st.per_shard]
+        assert len(set(lids)) == 8 and len(lids) == 16
+        assert all(d["fused_shards"] == 2 for d in st.per_shard)
+        leads = [d for d in st.per_shard if d["launches"] > 0]
+        assert len(leads) == 8
+        assert sum(d["launches"] for d in st.per_shard) == \\
+            sum(delta[d] for d in active)
+        for i in range(B):
+            _, sims_l = linear_scan_knn(qs[i], db, k)
+            np.testing.assert_array_equal(sims[i], sims_l)
+        # second batch: super indexes cached, still 8 walk launches
+        walk0 = ops.LAUNCH_COUNTS["device_probe"]
+        ids2, sims2, _ = eng.knn_batch(qs, k)
+        assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 8
+        np.testing.assert_array_equal(ids2, ids)
+        print("OK")
+    """)
+
+
 # ------------------------------------------------- deprecated shim
 def test_core_distributed_shim_warns_and_reexports():
     """core.distributed is a DeprecationWarning shim now; its re-exports
