@@ -22,6 +22,20 @@ drain. Cells come in pairs:
     ``parallel_active: false`` reads as "host can't pay for the pool",
     not as a pipelining regression.
 
+With ``--hosts H`` (H > 1) a third backend joins the sweep: the
+cross-host ``cluster`` tier (repro.cluster) — a coordinator plus H
+spawned localhost workers, each serving its host-partitioned slice of
+the same S shards, merged over the TCP frame protocol with the bound
+broadcast live. Cluster cells require S >= H (one shard per host at
+minimum) and report ``mode="sequential"`` (the fan-out across hosts IS
+the parallelism; there is no separate pipelined variant).
+``speedup_vs_sequential`` on a cluster row is measured against the
+single-host sequential sharded_amih cell at the same (probe_backend,
+batch) — the "what did crossing host boundaries cost/buy" number. Every
+row carries a ``hosts`` key (1 on single-host rows) so
+``scripts/bench_check.py`` keys the cells apart; baselines written
+before the axis existed default to hosts=1 and keep parsing.
+
 Reported per cell: ms_per_query + qps over the best-of-REPEATS drain,
 and p50/p99 over that drain's per-step latencies (enqueue -> step
 completion, the number a serving SLO would track). ``speedup_vs_sequential``
@@ -95,7 +109,7 @@ def _drain(engine, qs, k: int, batch: int):
 def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
         batches=(1, 32), shards=(1, 8), out_json: str | None = None,
         sizes=None, csv_name: str = "serving.csv",
-        probe_backends=("host", "device")):
+        probe_backends=("host", "device"), hosts=(1,)):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 100_000))
     if sizes is None:
         sizes = [n for n in (10_000, 100_000, 1_000_000) if n <= max_n]
@@ -141,7 +155,7 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                             "backend": "amih" if S == 1 else "sharded_amih",
                             "mode": mode, "p": p, "n": n, "K": k,
                             "batch": batch, "shards": S, "queries": nq,
-                            "probe_backend": pb,
+                            "probe_backend": pb, "hosts": 1,
                             "parallel_active": active,
                             "devices": n_dev,
                             "pool": (
@@ -178,12 +192,74 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                         )
                     if hasattr(engine, "close"):
                         engine.close()   # release the persistent pool
+                # cross-host cells: same S shards, partitioned over H
+                # spawned localhost workers behind the frame protocol.
+                # S >= H (host_partition needs a shard per host); the
+                # single-host sequential cell above is the speedup
+                # reference.
+                for H in hosts:
+                    if H <= 1 or S < H or S > n:
+                        continue
+                    for pb in probe_backends:
+                        engine = make_engine(
+                            "cluster", db, p, hosts=H, num_shards=S,
+                            probe_backend=pb,
+                        )
+                        try:
+                            for batch in batches:
+                                best_t, best_lats = float("inf"), []
+                                for _ in range(REPEATS):
+                                    t, lats = _drain(engine, qs, k, batch)
+                                    if t < best_t:
+                                        best_t, best_lats = t, lats
+                                ms_q = 1e3 * best_t / nq
+                                row = {
+                                    "backend": "cluster",
+                                    "mode": "sequential", "p": p,
+                                    "n": n, "K": k, "batch": batch,
+                                    "shards": S, "queries": nq,
+                                    "probe_backend": pb, "hosts": H,
+                                    "parallel_active": False,
+                                    "pool": "", "pool_forks": 0,
+                                    "total_s": round(best_t, 6),
+                                    "ms_per_query": round(ms_q, 4),
+                                    "qps": round(
+                                        nq / max(best_t, 1e-9), 2),
+                                    "p50_ms": round(float(
+                                        np.percentile(best_lats, 50)),
+                                        4),
+                                    "p99_ms": round(float(
+                                        np.percentile(best_lats, 99)),
+                                        4),
+                                    "speedup_vs_sequential": round(
+                                        seq_ms[pb, batch]
+                                        / max(ms_q, 1e-9), 3
+                                    ) if (pb, batch) in seq_ms else "",
+                                }
+                                rows.append(row)
+                                extra = (
+                                    f" ({row['speedup_vs_sequential']}"
+                                    f"x vs 1-host seq)"
+                                    if row["speedup_vs_sequential"]
+                                    else ""
+                                )
+                                print(
+                                    f"p={p} n={n:>9} S={S:>2} "
+                                    f"B={batch:>3} "
+                                    f"{'cluster':>13}[{pb}]/H={H:<7} "
+                                    f"{ms_q:7.3f} ms/q  "
+                                    f"p50={row['p50_ms']:.2f} "
+                                    f"p99={row['p99_ms']:.2f}{extra}"
+                                )
+                        finally:
+                            engine.close()
     path = write_csv(csv_name, rows)
     section = {
         "workload": {
             "sizes": sizes, "ps": list(ps), "k": k,
             "batches": list(batches), "shards": list(shards),
             "probe_backends": list(probe_backends),
+            "hosts": list(hosts),
             "queries": nq,
             "codes": "synthetic clustered (AQBC-like)",
         },
@@ -222,6 +298,10 @@ def _parse_args(argv=None):
                     default=["host", "device"],
                     choices=["host", "device"],
                     help="probing walks to time (axis of the sweep)")
+    ap.add_argument("--hosts", type=int, nargs="+", default=[1],
+                    help="cross-host cluster sizes to add to the sweep "
+                         "(values > 1 spawn localhost worker fleets; "
+                         "1 = single-host cells only)")
     ap.add_argument("--out", type=str, default=None,
                     help="write a standalone JSON payload here instead of "
                          "merging into BENCH_engine.json (bench_check)")
@@ -233,4 +313,5 @@ if __name__ == "__main__":
     run(max_n=a.max_n, nq=a.nq, ps=tuple(a.p), k=a.k,
         batches=tuple(sorted(set(a.batch))),
         shards=tuple(sorted(set(a.shards))), out_json=a.out,
-        probe_backends=tuple(dict.fromkeys(a.probe_backend)))
+        probe_backends=tuple(dict.fromkeys(a.probe_backend)),
+        hosts=tuple(sorted(set(a.hosts))))

@@ -78,9 +78,10 @@ def _cells(payload, batches, max_n, shards):
 
 
 def _serving_cells(section, max_n):
-    """(backend, mode, p, n, K, batch, shards, probe_backend) ->
+    """(backend, mode, p, n, K, batch, shards, probe_backend, hosts) ->
     (ms_per_query, config) for the serving-bench cells (see
-    benchmarks/bench_serving.py); pre-device-walk rows gate as "host".
+    benchmarks/bench_serving.py); pre-device-walk rows gate as "host"
+    and pre-cluster rows as hosts=1 (the only shape back then).
     ``config`` fingerprints the cell's execution shape — probe-pool
     flavor and placement-device count — so a persistent-pool cell is
     never gated against a per-call-fork or differently-placed baseline;
@@ -91,7 +92,7 @@ def _serving_cells(section, max_n):
             continue
         key = (row["backend"], row["mode"], row["p"], row["n"],
                row["K"], row["batch"], row["shards"],
-               row.get("probe_backend", "host"))
+               row.get("probe_backend", "host"), row.get("hosts", 1))
         cfg = (
             (row.get("pool", ""), row.get("devices"))
             if ("pool" in row or "devices" in row) else None
@@ -127,7 +128,7 @@ def check_serving(baseline, max_n, threshold) -> int:
 
     import bench_serving
 
-    def fresh(ps, sizes, batches, shards):
+    def fresh(ps, sizes, batches, shards, hosts):
         with tempfile.NamedTemporaryFile(
             mode="r", suffix=".json", prefix="bench_serving_check_",
             delete=False,
@@ -142,6 +143,7 @@ def check_serving(baseline, max_n, threshold) -> int:
                 probe_backends=tuple(
                     wl.get("probe_backends", ["host"])
                 ),
+                hosts=tuple(sorted(hosts)),
             )
             with open(path) as f:
                 return _serving_cells(json.load(f), serving_max_n)
@@ -149,7 +151,8 @@ def check_serving(baseline, max_n, threshold) -> int:
             os.unlink(path)
 
     base_cells = _serving_cells(section, serving_max_n)
-    fresh_cells = fresh(wl["ps"], wl["sizes"], wl["batches"], wl["shards"])
+    fresh_cells = fresh(wl["ps"], wl["sizes"], wl["batches"],
+                        wl["shards"], wl.get("hosts", [1]))
     shared, skipped = _comparable(base_cells, fresh_cells)
     for cell in skipped:
         print(f"bench_check: serving cell {cell} skipped — pool/placement "
@@ -176,18 +179,19 @@ def check_serving(baseline, max_n, threshold) -> int:
         retry = fresh(
             {c[2] for c in failures}, {c[3] for c in failures},
             {c[5] for c in failures}, {c[6] for c in failures},
+            {c[8] for c in failures},
         )
         for cell, (ms, _) in retry.items():
             if cell in fresh_ms:
                 fresh_ms[cell] = min(fresh_ms[cell], ms)
         failures = regressed()
     for cell in shared:
-        backend, mode, p, n, K, batch, n_shards, pb = cell
+        backend, mode, p, n, K, batch, n_shards, pb, n_hosts = cell
         ratio = fresh_ms[cell] / max(base_ms[cell], 1e-9)
         status = "FAIL" if cell in failures else "ok"
         print(f"  [{status}] {backend:>13}[{pb}]/{mode:<10} p={p} "
               f"n={n:>9} K={K:>3} B={batch:>3} S={n_shards:>2} "
-              f"baseline={base_ms[cell]:.3f} "
+              f"H={n_hosts} baseline={base_ms[cell]:.3f} "
               f"fresh={fresh_ms[cell]:.3f} ms/q ({ratio:.2f}x)")
     if failures:
         print(f"bench_check: {len(failures)}/{len(shared)} serving cells "

@@ -60,6 +60,9 @@ _NAMESPACE_MODULES = (
     "repro.pipeline.shardpool",
     "repro.kernels.ops",
     "repro.serve.retrieval",
+    "repro.cluster",
+    "repro.cluster.worker",
+    "repro.cluster.transport",
 )
 
 

@@ -12,6 +12,10 @@ python -m pytest -x -q "$@"
 # overlap, shard-parallel probing, streaming loop) answers bit-identical
 # to its sequential counterpart on a small workload (~10 s).
 python -m repro.pipeline.smoke
+# Cross-host serving smoke: coordinator + 2 spawned localhost workers
+# answer a mixed batch over the full wire protocol (build frames,
+# fan-out, bound broadcast, merge) bit-identical to linear_scan_knn.
+python -m repro.cluster.smoke
 # Docs-rot gate: every repo path / repro.* identifier cited in
 # README/docs/ROADMAP must still exist (see scripts/check_docs.py).
 python scripts/check_docs.py

@@ -77,7 +77,12 @@ class EngineStats:
     dict per shard: rows held, candidates contributed/verified, device
     launches issued, and ``"device"`` — the placement device the shard's
     codes live on and its verification ran on) — the serving-side view
-    of where a batch's work landed. ``cache_hits`` counts query rows
+    of where a batch's work landed. The cross-host cluster engine
+    (repro.cluster) adds ``per_host``: one dict per worker host
+    aggregating its rows, shard count, summed launch/probe counters,
+    its own ``per_shard``/``cache_info`` sections, and RPC timing — the
+    same attribution one level up, so serving dashboards stay honest
+    about WHICH HOST work ran on, not just which device. ``cache_hits`` counts query rows
     answered from the engine's hot-query cache without any probing
     (AMIHEngine's LRU). ``cache_info`` snapshots the process-wide shared
     caches after the batch: the (p, z) probing-sequence cache and — on
@@ -98,6 +103,7 @@ class EngineStats:
     per_query: List[Optional[object]] = field(default_factory=list)
     shards: int = 0
     per_shard: List[Dict[str, int]] = field(default_factory=list)
+    per_host: List[Dict[str, object]] = field(default_factory=list)
     cache_hits: int = 0
     cache_info: Dict[str, int] = field(default_factory=dict)
     queue_depth: int = 0
@@ -246,6 +252,15 @@ def make_engine(
                           ``probe_fused``, ``enumeration_cap``,
                           ``probe_workers``, ``probe_mode``,
                           ``prime_bound``.
+      - "cluster"       — cross-host coordinator over worker processes
+                          (repro.cluster): each worker runs an
+                          ``inner_backend`` sharded engine over its
+                          host-partitioned slice; the monotone k-th
+                          cosine floor broadcasts between hosts.
+                          ``hosts`` | ``workers`` (address list),
+                          ``inner_backend``, ``num_shards``,
+                          ``prime_bound``, ``request_timeout``; extra
+                          knobs forward to every worker's engine.
 
     Every backend answers the same batched ``knn_batch(q_words, k)`` and
     returns results bit-identical to ``linear_scan_knn`` (up to ties
@@ -261,6 +276,10 @@ def make_engine(
             from .. import shard  # noqa: F401  (registers them)
         except ImportError:
             pass  # no jax on this host: fall through to the ValueError
+        cls = ENGINES.get(backend)
+    if cls is None and backend == "cluster":
+        from .. import cluster  # noqa: F401  (registers ClusterEngine)
+
         cls = ENGINES.get(backend)
     if cls is None:
         raise ValueError(

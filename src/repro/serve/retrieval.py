@@ -4,7 +4,9 @@ Pipeline:  encoder LM  ->  mean-pooled hidden state  ->  AQBC binarization
            ->  exact angular KNN through the unified SearchEngine
            (core.engine; backend selected by name — including the
            pod-scale "sharded_scan"/"sharded_amih" backends of
-           repro.shard, configured via the mesh/num_shards knobs).
+           repro.shard, configured via the mesh/num_shards knobs, and
+           the cross-host "cluster" tier of repro.cluster, selected by
+           ``RetrievalConfig.cluster``/``hosts``).
 
 This is the production shape of the paper: binary hashing exists to make
 billion-item corpora searchable in RAM (paper §6.3.4); the LM zoo supplies
@@ -107,6 +109,15 @@ class RetrievalConfig:
     # (round-robin over shards); None derives placement from the mesh,
     # falling back to the local devices.
     devices: Optional[Tuple[object, ...]] = None
+    # Cross-host serving tier (repro.cluster): cluster=True swaps the
+    # engine for the "cluster" backend — a coordinator over ``hosts``
+    # worker processes, each running ``backend`` (which must then be a
+    # sharded backend; any other name serves via sharded_amih workers)
+    # over its host-partitioned slice, with the monotone k-th-cosine
+    # floor broadcast between hosts. Exact results, same knn_batch API;
+    # the queued/streaming serving loop is unchanged on top.
+    cluster: bool = False
+    hosts: int = 2
 
     @property
     def engine(self) -> str:
@@ -259,10 +270,35 @@ class RetrievalService:
                 "probe_stream_cap": self.rcfg.probe_stream_cap,
                 "probe_fused": self.rcfg.probe_fused,
             }
+        backend = self.rcfg.backend
+        if self.rcfg.cluster:
+            # cross-host tier: the coordinator ships each worker its
+            # host-partitioned slice; workers run the sharded flavor of
+            # the configured backend (anything unsharded serves through
+            # sharded_amih workers). Only JSON-serializable knobs cross
+            # the wire — mesh/devices placement is re-derived per host.
+            inner = backend if backend in ("sharded_amih", "sharded_scan") \
+                else "sharded_amih"
+            cfg = {
+                "hosts": self.rcfg.hosts,
+                "inner_backend": inner,
+                "num_shards": self.rcfg.num_shards,
+            }
+            if inner == "sharded_amih":
+                cfg.update(
+                    m=self.rcfg.m_tables,
+                    verify_backend=self.rcfg.verify_backend,
+                    enumeration_cap=self.rcfg.enumeration_cap,
+                    probe_backend=self.rcfg.probe_backend,
+                    probe_stream_cap=self.rcfg.probe_stream_cap,
+                    probe_fused=self.rcfg.probe_fused,
+                )
+            backend = "cluster"
         self.engine = make_engine(
-            self.rcfg.backend, self.db_words, self.rcfg.code_bits, **cfg
+            backend, self.db_words, self.rcfg.code_bits, **cfg
         )
-        if (self.rcfg.backend == "sharded_amih" and self.rcfg.pipelined
+        if (self.rcfg.backend == "sharded_amih" and not self.rcfg.cluster
+                and self.rcfg.pipelined
                 and self.rcfg.probe_workers is None):
             # pipelined default: one probe worker per (non-empty) shard
             self.engine.probe_workers = len(self.engine.indexes)

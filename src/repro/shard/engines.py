@@ -472,11 +472,109 @@ class ShardedAMIHEngine(SearchEngine):
         else:
             shard_out = self._probe_sequential(q, k_eff)
 
+        per_shard, gid_parts, sim_parts = self._fold_shard_out(
+            shard_out, fuse_meta, per_query, B, k_eff
+        )
+        ids_out = np.empty((B, k_eff), dtype=np.int64)
+        sims_out = np.empty((B, k_eff), dtype=np.float64)
+        for i in range(B):
+            gids = np.concatenate(gid_parts[i]) if gid_parts[i] \
+                else np.empty(0, dtype=np.int64)
+            sims = np.concatenate(sim_parts[i]) if sim_parts[i] \
+                else np.empty(0, dtype=np.float64)
+            order = np.lexsort((gids, -sims))[:k_eff]
+            ids_out[i] = gids[order]
+            sims_out[i] = sims[order]
+        stats = EngineStats(
+            backend=self.name, queries=B, per_query=per_query,
+            shards=self.plan.num_shards, per_shard=per_shard,
+            cache_info=probe_cache_snapshot(),
+        )
+        return ids_out, sims_out, stats
+
+    def knn_batch_bounded(self, q_words, k, stop_below, on_done=None):
+        """``knn_batch`` pruned by an external LIVE per-query floor — the
+        engine-level form of ``AMIHIndex.knn_batch_bounded``, built for
+        the cross-host tier (repro.cluster): each worker host runs its
+        slice under the cluster-wide k-th-cosine floor, so a query whose
+        global top-K already lives on other hosts stops probing here
+        early. Results are RAGGED — a per-query ``(ids, sims)`` list
+        holding this host's rows with sim >= the floor, possibly fewer
+        than k when the floor pruned locally — plus the same
+        ``EngineStats`` as ``knn_batch``.
+
+        ``stop_below`` must be a float64 (B,) array; its entries may
+        only ever RISE and must stay valid lower bounds on each query's
+        global k-th cosine. The sequential chain re-reads it live (a
+        remote raise prunes mid-shard) and raises it monotonically with
+        the local pooled k-th; the fused-device and parallel-pool paths
+        snapshot it at dispatch (a raise landing mid-flight costs time,
+        never correctness) and raise it at the merge. ``on_done(qi, ids,
+        sims)`` fires whenever query ``qi`` fills a local K (mid-probe
+        on the sequential chain, at the merge everywhere) — the cluster
+        worker publishes its local k-th through it."""
+        q = self._check_queries(q_words, self.p)
+        B = q.shape[0]
+        k_eff = min(k, self.n)
+        per_query = [AMIHStats() for _ in range(B)]
+        if k_eff == 0:
+            empty = (np.empty(0, np.int64), np.empty(0, np.float64))
+            return [empty for _ in range(B)], EngineStats(
+                backend=self.name, queries=B, per_query=per_query,
+                shards=self.plan.num_shards,
+            )
+        floor = np.asarray(stop_below)
+        if floor.dtype != np.float64 or floor.shape != (B,):
+            raise ValueError(
+                f"stop_below must be float64 of shape ({B},), got "
+                f"{floor.dtype} {floor.shape} — the live no-copy "
+                f"contract (see AMIHIndex.knn_batch_bounded)"
+            )
+        fuse_meta: Optional[Dict[int, Dict[str, Any]]] = None
+        groups = self._fused_groups()
+        if groups is not None:
+            shard_out, fuse_meta = self._probe_device_fused(
+                q, k_eff, groups, floor=floor
+            )
+        elif self._use_parallel(B):
+            shard_out = self._probe_parallel(q, k_eff, floor=floor)
+        else:
+            shard_out = self._probe_sequential(
+                q, k_eff, bounds=floor, on_done=on_done
+            )
+        per_shard, gid_parts, sim_parts = self._fold_shard_out(
+            shard_out, fuse_meta, per_query, B, k_eff
+        )
+        results: List[Tuple[np.ndarray, np.ndarray]] = []
+        for i in range(B):
+            gids = np.concatenate(gid_parts[i]) if gid_parts[i] \
+                else np.empty(0, dtype=np.int64)
+            sims = np.concatenate(sim_parts[i]) if sim_parts[i] \
+                else np.empty(0, dtype=np.float64)
+            order = np.lexsort((gids, -sims))[:k_eff]
+            ids_i, sims_i = gids[order], sims[order]
+            results.append((ids_i, sims_i))
+            if sims_i.size >= k_eff:
+                kth = float(sims_i[-1])
+                if kth > floor[i]:
+                    floor[i] = kth
+                if on_done is not None:
+                    on_done(i, ids_i, sims_i)
+        stats = EngineStats(
+            backend=self.name, queries=B, per_query=per_query,
+            shards=self.plan.num_shards, per_shard=per_shard,
+            cache_info=probe_cache_snapshot(),
+        )
+        return results, stats
+
+    def _fold_shard_out(self, shard_out, fuse_meta, per_query, B, k_eff):
+        """Fold per-shard probe output in shard-id order regardless of
+        probing order, so merged stats and results are deterministic
+        either way. Returns (per_shard aggregates, per-query gid parts,
+        per-query sim parts)."""
         per_shard: List[Dict[str, int]] = []
         gid_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
         sim_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
-        # fold in shard-id order regardless of probing order, so merged
-        # stats and results are deterministic either way
         for s, index in self.indexes:
             results, shard_stats, launches = shard_out[s]
             local_k = min(k_eff, index.n)
@@ -510,23 +608,7 @@ class ShardedAMIHEngine(SearchEngine):
                 # ``launches`` across shards equals real dispatches
                 agg.update(fuse_meta.get(s, {}))
             per_shard.append(agg)
-
-        ids_out = np.empty((B, k_eff), dtype=np.int64)
-        sims_out = np.empty((B, k_eff), dtype=np.float64)
-        for i in range(B):
-            gids = np.concatenate(gid_parts[i]) if gid_parts[i] \
-                else np.empty(0, dtype=np.int64)
-            sims = np.concatenate(sim_parts[i]) if sim_parts[i] \
-                else np.empty(0, dtype=np.float64)
-            order = np.lexsort((gids, -sims))[:k_eff]
-            ids_out[i] = gids[order]
-            sims_out[i] = sims[order]
-        stats = EngineStats(
-            backend=self.name, queries=B, per_query=per_query,
-            shards=self.plan.num_shards, per_shard=per_shard,
-            cache_info=probe_cache_snapshot(),
-        )
-        return ids_out, sims_out, stats
+        return per_shard, gid_parts, sim_parts
 
     def _fused_groups(self):
         """Per-device super-index groups for the fused device path,
@@ -597,16 +679,18 @@ class ShardedAMIHEngine(SearchEngine):
         self._fused = order
         return order
 
-    def _probe_device_fused(self, q, k_eff, groups):
+    def _probe_device_fused(self, q, k_eff, groups, floor=None):
         """One fused walk launch per DEVICE: dispatch every device group
         back-to-back without blocking, then resolve them in turn — the
         host only syncs per device at extraction time, so all devices
         probe concurrently. ``prime_bound`` warm-starts every group with
         the exact k-th sim of a deterministic row sample (each group is
         probed independently, so no cross-shard bound chaining exists to
-        lean on). Returns (shard_out, fuse_meta): per-shard result lists
-        split out of each device's super index, stats and launch counts
-        attributed to the group's lead shard (S6)."""
+        lean on); an external ``floor`` (the cluster-wide bound) is
+        SNAPSHOTTED at dispatch and max-folded in. Returns (shard_out,
+        fuse_meta): per-shard result lists split out of each device's
+        super index, stats and launch counts attributed to the group's
+        lead shard (S6)."""
         from ..core import probe_device
         from ..pipeline.shardpool import prime_ids
 
@@ -620,6 +704,9 @@ class ShardedAMIHEngine(SearchEngine):
                 for i in range(B):
                     sims_i = sims_for_ids(q[i], self.db_words, sample)
                     bounds[i] = np.partition(sims_i, cut)[cut]
+        if floor is not None:
+            snap = np.array(floor, dtype=np.float64, copy=True)
+            bounds = snap if bounds is None else np.maximum(bounds, snap)
         pend = []
         for g in groups:
             sup = g["super"]
@@ -672,19 +759,24 @@ class ShardedAMIHEngine(SearchEngine):
                 }
         return shard_out, fuse_meta
 
-    def _probe_sequential(self, q, k_eff):
+    def _probe_sequential(self, q, k_eff, bounds=None, on_done=None):
         """PR 3's chain: shards probed one after another, each next shard
-        bounded by the pooled k-th cosine of everything seen so far."""
+        bounded by the pooled k-th cosine of everything seen so far.
+        ``bounds`` may be a caller-owned LIVE float64 (B,) array (the
+        cluster-wide floor): each shard's bounded search re-reads it per
+        tuple step, and the chain's pooled-k-th writes are MONOTONE
+        raises — a concurrently-raised remote value is never lowered."""
         B = q.shape[0]
         shard_out: Dict[int, Tuple[list, list, int]] = {}
         sim_parts: List[List[np.ndarray]] = [[] for _ in range(B)]
-        bounds = np.full(B, -np.inf)
+        if bounds is None:
+            bounds = np.full(B, -np.inf)
         for s, index in self.indexes:
             shard_stats = [AMIHStats() for _ in range(B)]
             launches0 = index.verify_launches
             results = index.knn_batch_bounded(
                 q, k_eff, stop_below=bounds, stats=shard_stats,
-                enumeration_cap=self.enumeration_cap,
+                enumeration_cap=self.enumeration_cap, on_done=on_done,
             )
             for i, (r_ids, r_sims) in enumerate(results):
                 if r_ids.size:
@@ -695,9 +787,9 @@ class ShardedAMIHEngine(SearchEngine):
                         len(sim_parts[i]) > 1 else sim_parts[i][0]
                     # pooled k-th best cosine: sims strictly below it can
                     # never enter the global top-K of query i
-                    bounds[i] = np.partition(pool, total - k_eff)[
-                        total - k_eff
-                    ]
+                    b = np.partition(pool, total - k_eff)[total - k_eff]
+                    if b > bounds[i]:
+                        bounds[i] = b
             shard_out[s] = (results, shard_stats,
                             index.verify_launches - launches0)
         return shard_out
@@ -732,16 +824,17 @@ class ShardedAMIHEngine(SearchEngine):
                 )
             return self._pool
 
-    def _probe_parallel(self, q, k_eff):
+    def _probe_parallel(self, q, k_eff, floor=None):
         """Pipelined shard pool: all shards probe concurrently under one
-        shared monotone bound, warm-started from a row sample. The pool
-        is persistent — forked once per engine lifetime, each call ships
-        its task over the standing worker pipes."""
+        shared monotone bound, warm-started from a row sample (and from
+        a SNAPSHOT of the external cluster ``floor``, when given). The
+        pool is persistent — forked once per engine lifetime, each call
+        ships its task over the standing worker pipes."""
         from ..pipeline.shardpool import SharedBound, prime_ids
 
         pool = self._probe_pool()
         if pool is None:               # engine closed: no new workers
-            return self._probe_sequential(q, k_eff)
+            return self._probe_sequential(q, k_eff, bounds=floor)
         B = q.shape[0]
         shared = SharedBound(B, k_eff)
         if self.prime_bound:
@@ -750,6 +843,11 @@ class ShardedAMIHEngine(SearchEngine):
                 shared.offer(i, sample, sims_for_ids(
                     q[i], self.db_words, sample
                 ))
+        if floor is not None:
+            for i in range(B):
+                f = float(floor[i])
+                if f > -np.inf:
+                    shared.raise_to(i, f)
         try:
             return pool.probe(
                 q, k_eff, shared, enumeration_cap=self.enumeration_cap

@@ -17,7 +17,9 @@ One plan answers every layout question the sharded engines ask:
   - a JSON-serializable ``summary()`` (and ``from_summary`` inverse) so a
     serving fleet can ship the layout next to the checkpoint (device
     assignments serialize as strings, for observability only — a fresh
-    host re-derives its own placement via ``place``/``from_mesh``).
+    host re-derives its own placement via ``place``/``from_mesh``;
+    ``from_summary(strict=True)`` turns that documented drop into an
+    error for callers that must not lose placement silently).
 
 Plans are mesh-agnostic: ``balanced(n, num_shards)`` covers host-side
 sharding (one process walking the shards), ``from_mesh(mesh, n)`` derives
@@ -26,12 +28,21 @@ axes the DB rows are split over (the ``pod``/``data`` axes of the
 production meshes — any mesh axis works). ``place(devices)`` assigns an
 explicit device list round-robin (wrapping when there are fewer devices
 than shards — the single-device host degenerates to today's layout).
+
+Cross-host serving (repro.cluster) splits one plan across worker hosts:
+``host_partition(num_hosts)`` hands each host a sub-plan over a
+contiguous run of the parent's shards, with ``base`` recording the
+global id of the sub-plan's local row 0 — ``starts`` stay GLOBAL ids
+(so shard-emitted ids need no per-host fixup at the merge) while
+``shard_slice`` indexes the host's LOCAL row array. A worker rebuilds
+its exact slice layout from the sub-plan's wire ``summary()`` alone.
 """
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, field, replace
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -78,6 +89,13 @@ class ShardPlan:
     verification runs on. It is excluded from equality/serialization
     round-trips — placement is a property of the serving host, not of
     the layout contract.
+
+    ``base`` is the global DB id of the plan's local row 0 (0 for a
+    whole-DB plan). Sub-plans cut by ``host_partition`` carry the
+    offset of their host's first row here: ``starts`` remain GLOBAL
+    ids (``n`` and ``counts`` stay host-local), so engines built over
+    the host's local row slice still emit DB-wide ids without any
+    merge-time fixup.
     """
 
     n: int
@@ -85,6 +103,7 @@ class ShardPlan:
     counts: Tuple[int, ...]
     axis_names: Tuple[str, ...] = ()
     devices: Tuple[object, ...] = field(default=(), compare=False)
+    base: int = 0
 
     def __post_init__(self):
         if len(self.starts) != len(self.counts) or not self.starts:
@@ -92,6 +111,12 @@ class ShardPlan:
         if sum(self.counts) != self.n:
             raise ValueError(
                 f"counts sum to {sum(self.counts)}, expected n={self.n}"
+            )
+        if self.starts[0] != self.base:
+            raise ValueError(
+                f"starts[0]={self.starts[0]} must equal base={self.base} "
+                f"(starts are global ids; base is the global id of local "
+                f"row 0)"
             )
         if self.devices and len(self.devices) != len(self.counts):
             raise ValueError(
@@ -160,6 +185,41 @@ class ShardPlan:
         — callers fall back to the default device)."""
         return self.devices[s] if self.devices else None
 
+    # -------------------------------------------------------- partitioning
+    def host_partition(self, num_hosts: int) -> List["ShardPlan"]:
+        """Split this plan into ``num_hosts`` per-host sub-plans, each
+        covering a contiguous run of the parent's shards (run lengths
+        differ by at most one shard). Sub-plan ``starts`` keep the
+        parent's GLOBAL ids and ``base`` records the global id of the
+        host's first row, so a worker that loads only its local row
+        slice (``[base, base + n)`` of the parent DB) still emits
+        DB-wide ids — the coordinator merges without any offset fixup.
+        Device placements are not carried: each host re-derives its own
+        via ``place``/``from_mesh``."""
+        if num_hosts < 1:
+            raise ValueError(f"num_hosts must be >= 1, got {num_hosts}")
+        if num_hosts > self.num_shards:
+            raise ValueError(
+                f"num_hosts={num_hosts} exceeds num_shards="
+                f"{self.num_shards}; a host needs at least one shard"
+            )
+        per, rem = divmod(self.num_shards, num_hosts)
+        plans: List[ShardPlan] = []
+        s0 = 0
+        for h in range(num_hosts):
+            run = per + (1 if h < rem else 0)
+            starts = self.starts[s0 : s0 + run]
+            counts = self.counts[s0 : s0 + run]
+            plans.append(ShardPlan(
+                n=int(sum(counts)),
+                starts=starts,
+                counts=counts,
+                axis_names=self.axis_names,
+                base=int(starts[0]),
+            ))
+            s0 += run
+        return plans
+
     # ------------------------------------------------------------ geometry
     @property
     def num_shards(self) -> int:
@@ -171,7 +231,11 @@ class ShardPlan:
         return max(self.counts) if self.counts else 0
 
     def shard_slice(self, s: int) -> slice:
-        return slice(self.starts[s], self.starts[s] + self.counts[s])
+        """Shard ``s``'s rows in the plan's LOCAL row array (for a
+        whole-DB plan, local == global; a ``host_partition`` sub-plan
+        subtracts ``base`` so it slices the host's own row slab)."""
+        lo = self.starts[s] - self.base
+        return slice(lo, lo + self.counts[s])
 
     def global_ids(self, s: int, local_ids: np.ndarray) -> np.ndarray:
         return np.asarray(local_ids) + self.starts[s]
@@ -202,15 +266,36 @@ class ShardPlan:
             "counts": list(self.counts),
             "axis_names": list(self.axis_names),
         }
+        if self.base:
+            out["base"] = self.base
         if self.devices:
             out["devices"] = [str(d) for d in self.devices]
         return out
 
     @classmethod
-    def from_summary(cls, d: Dict[str, object]) -> "ShardPlan":
+    def from_summary(
+        cls, d: Dict[str, object], strict: bool = False
+    ) -> "ShardPlan":
+        """Rebuild a plan from ``summary()`` output. Device placements do
+        NOT round-trip (they serialize as strings, for observability) —
+        the result is always unplaced. A summary that recorded a
+        placement triggers a warning, or a ValueError with
+        ``strict=True`` for callers that must not lose placement
+        silently."""
+        if "devices" in d:
+            msg = (
+                "ShardPlan.from_summary drops device placements "
+                f"({len(d['devices'])} recorded): device strings cannot "
+                "be resolved to live devices on a different host — "
+                "re-place via ShardPlan.place or from_mesh"
+            )
+            if strict:
+                raise ValueError(msg)
+            warnings.warn(msg, stacklevel=2)
         return cls(
             n=int(d["n"]),
             starts=tuple(int(x) for x in d["starts"]),
             counts=tuple(int(x) for x in d["counts"]),
             axis_names=tuple(d.get("axis_names", ())),
+            base=int(d.get("base", 0)),
         )

@@ -91,6 +91,50 @@ def test_plan_validation():
         ShardPlan.balanced(10, 0)
     with pytest.raises(ValueError, match="counts sum"):
         ShardPlan(n=5, starts=(0, 2), counts=(2, 2))
+    with pytest.raises(ValueError, match="base"):
+        ShardPlan(n=4, starts=(3, 5), counts=(2, 2))   # base defaults to 0
+
+
+def test_plan_host_partition_global_ids_and_local_slices():
+    """host_partition: contiguous shard runs differing by <= 1 shard,
+    GLOBAL starts with per-host base, local shard_slice, and sub-plan
+    summaries that round-trip base over the wire."""
+    plan = ShardPlan.balanced(103, 8, axis_names=("pod",))
+    subs = plan.host_partition(3)
+    assert [s.num_shards for s in subs] == [3, 3, 2]   # differ by <= 1
+    assert sum(s.n for s in subs) == plan.n
+    # contiguous coverage: each host's base is where the previous ended
+    assert subs[0].base == 0
+    for prev, cur in zip(subs, subs[1:]):
+        assert cur.base == prev.base + prev.n
+    covered = []
+    for sub in subs:
+        assert sub.axis_names == plan.axis_names
+        assert sub.devices == ()                       # placement dropped
+        for s in range(sub.num_shards):
+            # starts are GLOBAL: global_ids needs no per-host fixup
+            lo = sub.starts[s]
+            np.testing.assert_array_equal(
+                sub.global_ids(s, np.arange(sub.counts[s])),
+                np.arange(lo, lo + sub.counts[s]),
+            )
+            # shard_slice is LOCAL to the host's row slab
+            sl = sub.shard_slice(s)
+            assert sl.start == lo - sub.base
+            covered.extend(range(lo, lo + sub.counts[s]))
+    assert covered == list(range(plan.n))              # exact tiling
+    # wire round-trip keeps base (the "base" key appears iff nonzero)
+    for sub in subs:
+        wire = json.loads(json.dumps(sub.summary()))
+        assert ("base" in wire) == (sub.base != 0)
+        assert ShardPlan.from_summary(wire) == sub
+    # degenerate and invalid host counts
+    assert plan.host_partition(1) == [plan]
+    assert plan.host_partition(8)[7].num_shards == 1
+    with pytest.raises(ValueError, match="num_hosts"):
+        plan.host_partition(0)
+    with pytest.raises(ValueError, match="at least one shard"):
+        plan.host_partition(9)
 
 
 # ------------------------------------------- host-mode engines (1 device)
@@ -223,9 +267,14 @@ def test_plan_place_round_robin_and_validation():
     wide = plan.place(["a", "b", "c", "d", "e"])  # extra devices idle
     assert wide.devices == ("a", "b", "c", "d")
     # summaries carry the placement as strings, and round-trip unplaced
+    # — an EXPLICIT drop now: warning by default, error under strict=
     s = placed.summary()
     assert s["devices"] == ["d0", "d1", "d2", "d0"]
-    assert ShardPlan.from_summary(json.loads(json.dumps(s))).devices == ()
+    with pytest.warns(UserWarning, match="drops device placements"):
+        restored = ShardPlan.from_summary(json.loads(json.dumps(s)))
+    assert restored.devices == () and restored == plan
+    with pytest.raises(ValueError, match="drops device placements"):
+        ShardPlan.from_summary(s, strict=True)
     with pytest.raises(ValueError, match="devices maps"):
         ShardPlan(n=10, starts=placed.starts, counts=placed.counts,
                   devices=("d0",))
