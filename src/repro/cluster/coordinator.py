@@ -145,6 +145,12 @@ class ClusterCoordinator:
         self._ping_seq = 0
         self._closed = False
         for h in self.handles:
+            # the handle's last_seen was stamped at socket-connect time,
+            # and build (slab transfer + engine construction) can take
+            # minutes — restart the staleness clock NOW, or the first
+            # heartbeat check would mark every worker dead before a
+            # single ping went out
+            h.last_seen = time.monotonic()
             h.reader = threading.Thread(
                 target=self._reader, args=(h,), daemon=True
             )
@@ -168,6 +174,14 @@ class ClusterCoordinator:
                     f"mid-request {cur.req}"
                 )
             self._cond.notify_all()
+        # shutdown BEFORE close: close() alone neither sends FIN nor
+        # unblocks a reader parked in recv on this socket (the in-flight
+        # syscall pins the kernel socket), so the worker would never see
+        # EOF and our reader thread would never exit
+        try:
+            h.sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
         try:
             h.sock.close()
         except OSError:
@@ -218,9 +232,15 @@ class ClusterCoordinator:
                             self._cond.notify_all()
                 else:
                     raise FrameError(f"unexpected frame {kind!r}")
-        except (FrameError, OSError):
+        except Exception:   # noqa: BLE001
+            # not just FrameError/OSError: a well-framed but corrupt
+            # payload (bad ragged lengths, unexpected stats fields, …)
+            # must also kill the handle IMMEDIATELY — otherwise the
+            # in-flight request would sit out the full request_timeout
+            # with a reader that is already gone
             pass
-        self._mark_dead(h)
+        finally:
+            self._mark_dead(h)
 
     def _on_result(self, h, meta, arrays) -> None:
         elapsed = None
@@ -307,6 +327,7 @@ class ClusterCoordinator:
                 except OSError:
                     self._mark_dead(h)
             deadline = cur.t0 + self.request_timeout
+            timed_out: List[_WorkerHandle] = []
             with self._cond:
                 while not cur.settled():
                     remaining = deadline - time.monotonic()
@@ -319,13 +340,19 @@ class ClusterCoordinator:
                         )
                         break
                     self._cond.wait(remaining)
+                if isinstance(cur.error, RequestTimeoutError):
+                    # a silent worker is an unusable worker: degrade
+                    # rather than racing its late result next call
+                    timed_out = [h for h in self.handles
+                                 if h.alive and h.host not in cur.results]
+            # _mark_dead takes the condition lock itself (and closing the
+            # socket unblocks the reader thread), so it runs outside —
+            # flipping alive in place would leave the reader parked in
+            # recv_frame and the connection lingering until close()
+            for h in timed_out:
+                self._mark_dead(h)
+            with self._cond:
                 if cur.error is not None:
-                    if isinstance(cur.error, RequestTimeoutError):
-                        # a silent worker is an unusable worker: degrade
-                        # rather than racing its late result next call
-                        for h in self.handles:
-                            if h.alive and h.host not in cur.results:
-                                h.alive = False
                     raise cur.error
                 return cur.results, cur.floor
         finally:
@@ -344,6 +371,10 @@ class ClusterCoordinator:
                     h.send("close")
                 except OSError:
                     pass
+            try:
+                h.sock.shutdown(socket.SHUT_RDWR)
+            except OSError:
+                pass
             try:
                 h.sock.close()
             except OSError:

@@ -155,7 +155,16 @@ def recv_frame(
     for d in descr:
         if str(d["dtype"]) not in _WIRE_DTYPES:
             raise FrameError(f"non-wire dtype {d['dtype']!r} declared")
-        total += int(np.prod(d["shape"], dtype=np.int64)) * \
+        try:
+            dims = [int(x) for x in d["shape"]]
+        except (TypeError, ValueError) as e:
+            raise FrameError(f"undecodable shape declared: {e}") from None
+        if any(x < 0 for x in dims):
+            # a negative dim makes np.prod negative, which would slip
+            # under MAX_PAYLOAD and reach np.frombuffer as a bad count
+            raise FrameError(f"negative dimension in declared shape {dims}")
+        d["shape"] = dims
+        total += int(np.prod(dims, dtype=np.int64)) * \
             np.dtype(d["dtype"]).itemsize
     if total > MAX_PAYLOAD:
         raise FrameError(f"declared payload of {total} bytes")

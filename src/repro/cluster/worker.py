@@ -209,6 +209,12 @@ class WorkerServer:
                     raise FrameError(f"unknown frame kind {kind!r}")
         except (FrameError, OSError):
             pass   # coordinator gone: fall through to cleanup
+        except Exception:   # noqa: BLE001
+            # well-framed but malformed content (missing meta key, bad
+            # plan/cfg fed to make_engine, …) tears down THIS connection
+            # — the documented failure unit — and the server re-accepts;
+            # it must never kill the worker process
+            pass
         finally:
             dead.set()
             # collapse any in-flight search: +inf floor prunes every

@@ -13,7 +13,9 @@ importing jax — seconds per process), shared by every exactness test via
 ``workers=``; the kill test gets its own throwaway fleet.
 """
 
+import json
 import socket
+import struct
 import threading
 import time
 
@@ -25,6 +27,7 @@ from repro.cluster import (
     FrameError,
     LocalCluster,
     RequestTimeoutError,
+    WorkerDiedError,
     pack_ragged,
     recv_frame,
     send_frame,
@@ -157,6 +160,24 @@ def test_frame_truncation_and_bad_magic_raise_frame_error():
         a.close(), b.close()
 
 
+def test_frame_rejects_negative_declared_shape():
+    """A negative dim makes np.prod negative, which would slip under the
+    MAX_PAYLOAD guard and reach np.frombuffer as a bad count — the
+    receiver must reject it as a FrameError up front."""
+    a, b = _pair()
+    try:
+        hdr = json.dumps({
+            "kind": "result",
+            "arrays": [{"name": "z", "dtype": "int64",
+                        "shape": [-1, 1 << 40]}],
+        }).encode()
+        a.sendall(b"AMRP" + struct.pack(">I", len(hdr)) + hdr)
+        with pytest.raises(FrameError, match="negative dimension"):
+            recv_frame(b)
+    finally:
+        a.close(), b.close()
+
+
 def test_recv_frame_timeout_bounds_idle_wait():
     a, b = _pair()
     try:
@@ -276,6 +297,34 @@ def test_worker_frame_loop_in_process():
         t.join(timeout=10)
 
 
+def test_worker_survives_malformed_frame_content():
+    """A well-framed build whose CONTENT is garbage (missing meta keys)
+    must tear down that connection only — the documented failure unit —
+    and the server keeps accepting, never dying with the exception."""
+    srv = WorkerServer("127.0.0.1", 0)
+    t = threading.Thread(target=srv.serve_forever, daemon=True)
+    t.start()
+    try:
+        sock = socket.create_connection(srv.addr, timeout=10)
+        try:
+            send_frame(sock, "build", {"host": 0})   # no backend/plan/p
+            with pytest.raises(FrameError):          # conn torn down
+                recv_frame(sock, timeout=10)
+        finally:
+            sock.close()
+        # the process survived: a fresh connection still gets service
+        sock = socket.create_connection(srv.addr, timeout=10)
+        try:
+            send_frame(sock, "ping", {"seq": 9})
+            kind, meta, _ = recv_frame(sock, timeout=10)
+            assert kind == "pong" and meta["seq"] == 9
+        finally:
+            sock.close()
+    finally:
+        srv.close()
+        t.join(timeout=10)
+
+
 # ============================================= coordinator failure semantics
 class _StubWorker:
     """Protocol-correct worker that never answers searches: replies
@@ -319,6 +368,120 @@ class _StubWorker:
         self._t.join(timeout=5)
 
 
+def test_heartbeat_clock_restarts_after_slow_build():
+    """Regression: last_seen is stamped at socket-connect time, but a
+    build (slab transfer + engine construction) can take minutes — the
+    coordinator must restart the staleness clock at init, or the first
+    heartbeat check marks every worker dead before any ping is sent."""
+    from repro.cluster.coordinator import ClusterCoordinator, \
+        _WorkerHandle
+
+    a, b = _pair()
+    stop = threading.Event()
+
+    def ponger():
+        try:
+            while not stop.is_set():
+                kind, meta, _ = recv_frame(b)
+                if kind == "ping":
+                    send_frame(b, "pong", {"seq": meta.get("seq", 0)})
+        except (FrameError, OSError):
+            pass
+
+    t = threading.Thread(target=ponger, daemon=True)
+    t.start()
+    h = _WorkerHandle(0, ("127.0.0.1", 0), a)
+    h.last_seen -= 60.0                # pretend build took a minute
+    coord = ClusterCoordinator(
+        [h], ShardPlan.balanced(10, 1), heartbeat=0.1
+    )
+    try:
+        time.sleep(1.0)                # ~10 beats: any stale clock trips
+        assert h.alive
+    finally:
+        stop.set()
+        coord.close()
+        t.join(timeout=5)
+
+
+class _GarbageResultWorker:
+    """Answers the build correctly, then replies to a search with a
+    WELL-FRAMED result whose stats rows don't decode (unexpected field
+    -> TypeError in stats_from_wire) — the escape path that bypasses
+    FrameError/OSError in the coordinator's reader."""
+
+    def __init__(self):
+        self._srv = socket.create_server(("127.0.0.1", 0))
+        self.addr = self._srv.getsockname()[:2]
+        self._t = threading.Thread(target=self._loop, daemon=True)
+        self._t.start()
+
+    def _loop(self):
+        try:
+            conn, _ = self._srv.accept()
+        except OSError:
+            return
+        try:
+            while True:
+                kind, meta, arrays = recv_frame(conn)
+                if kind == "build":
+                    send_frame(conn, "ready", {
+                        "host": meta.get("host", 0),
+                        "n": meta["plan"]["n"],
+                        "shards": meta["plan"]["num_shards"],
+                    })
+                elif kind == "ping":
+                    send_frame(conn, "pong", {"seq": meta.get("seq", 0)})
+                elif kind == "search":
+                    B = arrays["q"].shape[0]
+                    send_frame(conn, "result", {
+                        "req": meta["req"],
+                        "stats": {"per_query": [
+                            {"_kind": "AMIHStats", "no_such_counter": 1}
+                        ]},
+                    }, {
+                        "ids": np.zeros(0, dtype=np.int64),
+                        "sims": np.zeros(0, dtype=np.float64),
+                        "lens": np.zeros(B, dtype=np.int64),
+                    })
+                elif kind == "close":
+                    return
+        except (FrameError, OSError):
+            pass
+        finally:
+            conn.close()
+
+    def close(self):
+        self._srv.close()
+        self._t.join(timeout=5)
+
+
+def test_corrupt_result_fails_request_fast_not_timeout():
+    """A result the reader can't decode must fail the in-flight request
+    IMMEDIATELY via _mark_dead, not silently kill the reader thread and
+    leave the request to sit out the full request_timeout."""
+    p, n = 64, 200
+    db = pack_bits(synthetic_binary_codes(n, p, seed=24))
+    qs = pack_bits(synthetic_queries(
+        synthetic_binary_codes(n, p, seed=24), 2, seed=25))
+    stub = _GarbageResultWorker()
+    try:
+        eng = make_engine(
+            "cluster", db, p, workers=[stub.addr],
+            request_timeout=60.0, heartbeat=0.4,
+        )
+        try:
+            t0 = time.perf_counter()
+            with pytest.raises(WorkerDiedError):
+                eng.knn_batch(qs, 3)
+            # via the reader's death, NOT the 60 s request timeout
+            assert time.perf_counter() - t0 < 20.0
+        finally:
+            eng.close()
+    finally:
+        stub.close()
+
+
 def test_request_timeout_degrades_silent_worker():
     p, n = 64, 200
     db = pack_bits(synthetic_binary_codes(n, p, seed=22))
@@ -336,6 +499,11 @@ def test_request_timeout_degrades_silent_worker():
                 eng.knn_batch(qs, 3)
             assert time.perf_counter() - t0 < 30.0   # bounded, no hang
             assert stub.searches == 1
+            # the timed-out handle's socket is CLOSED (not just flagged
+            # dead): the stub's serving loop sees EOF and exits, instead
+            # of lingering until eng.close() with a parked reader
+            stub._t.join(timeout=10.0)
+            assert not stub._t.is_alive()
             # the silent worker is OUT: the cluster fails fast now
             # instead of re-timing-out every request
             with pytest.raises(ClusterDegradedError):
