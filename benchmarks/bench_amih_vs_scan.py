@@ -97,13 +97,13 @@ def _verify_launches(engine) -> int:
 
 
 def _probe_launch_counts():
-    """(walk, scan) device probe launch counters so far — 0s when jax
-    (hence the device probe path) was never imported."""
-    mod = sys.modules.get("repro.kernels.ops")
-    if mod is None:
-        return 0, 0
-    return (mod.LAUNCH_COUNTS["device_probe"],
-            mod.LAUNCH_COUNTS["device_probe_scan"])
+    """(walk, scan) device probe launch counters so far, read from the
+    metrics registry (repro.obs.metrics — the counters exist as 0 even
+    before jax/the device probe path was ever imported)."""
+    from repro.obs.metrics import REGISTRY
+
+    return (REGISTRY.value("launches.device_probe"),
+            REGISTRY.value("launches.device_probe_scan"))
 
 
 def _time_batched(engine, qs, k, batch):
@@ -141,6 +141,25 @@ def _time_batched(engine, qs, k, batch):
     return best, totals
 
 
+def _capture_trace(engine, qs, k, out_path):
+    """One traced repetition OUTSIDE the timed reps: the timed sweeps run
+    with tracing disabled (a span site costs one attribute check), then
+    this single extra call records every span layer and writes a
+    Perfetto-loadable Chrome trace — validated by reading it back."""
+    from repro.obs import trace as _obs
+    from repro.obs.export import load_chrome_trace, write_chrome_trace
+
+    tracer = _obs.Tracer(enabled=True, host="bench")
+    prev = _obs.set_tracer(tracer)
+    try:
+        engine.knn_batch(qs, k)
+    finally:
+        _obs.set_tracer(prev)
+    n_spans = write_chrome_trace(tracer, out_path)
+    load_chrome_trace(out_path)   # raises unless Perfetto-loadable
+    print(f"wrote {out_path} ({n_spans} spans, traced rep untimed)")
+
+
 def _time_seed_loop(index, qs, k):
     """The pre-engine shape: one AMIHIndex.knn call per query, with the
     probing sequence re-enumerated every call (clearing the cache matches
@@ -159,7 +178,8 @@ def _time_seed_loop(index, qs, k):
 def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
         ps=(64, 128), ks=(1, 10, 100), out_json: str | None = None,
         sizes=None, csv_name: str = "amih_vs_scan.csv",
-        shards=(1, 8), probe_backends=("host", "device")):
+        shards=(1, 8), probe_backends=("host", "device"),
+        trace_out: str | None = None):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 1_000_000))
     if sizes is None:
         sizes = [n for n in (10_000, 100_000, 1_000_000, 10_000_000)
@@ -236,6 +256,12 @@ def run(max_n: int | None = None, nq: int = 64, batches=(1, 8, 64),
                 builds[pb] = time.perf_counter() - t_build0
             scan = make_engine("linear_scan", db, p)
             ref = engines.get("host", engines[probe_backends[0]])
+            if trace_out is not None:
+                # once, on the first (smallest) cell — the trace shows
+                # the span taxonomy, not the perf numbers
+                _capture_trace(ref, qs[: min(len(qs), 8)], ks[0],
+                               trace_out)
+                trace_out = None
             for K in ks:
                 t_seed = _time_seed_loop(ref.index, qs, K)
                 t_scan, _ = _time_batched(scan, qs, K, max(batches))
@@ -336,6 +362,9 @@ def _parse_args(argv=None):
     ap.add_argument("--out", type=str, default=None,
                     help="write the JSON payload here instead of "
                          "BENCH_engine.json (used by scripts/bench_check)")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT.json",
+                    help="capture ONE traced repetition (outside the "
+                         "timed reps) as a Chrome trace at this path")
     return ap.parse_args(argv)
 
 
@@ -344,4 +373,5 @@ if __name__ == "__main__":
     run(max_n=a.max_n, nq=a.nq, batches=tuple(sorted(set(a.batch))),
         ps=tuple(a.p), ks=tuple(a.k), out_json=a.out,
         shards=tuple(sorted(set(a.shards))),
-        probe_backends=tuple(dict.fromkeys(a.probe_backend)))
+        probe_backends=tuple(dict.fromkeys(a.probe_backend)),
+        trace_out=a.trace)

@@ -106,10 +106,31 @@ def _drain(engine, qs, k: int, batch: int):
     return time.perf_counter() - t0, lats
 
 
+def _capture_trace(engine, qs, k: int, batch: int, out_path: str):
+    """One traced streaming drain OUTSIDE the timed reps: the timed
+    drains run with tracing disabled (a span site costs one attribute
+    check), then this extra drain records the serving-stage, engine,
+    AMIH and kernel-launch spans and writes a Perfetto-loadable Chrome
+    trace — validated by reading it back."""
+    from repro.obs import trace as _obs
+    from repro.obs.export import load_chrome_trace, write_chrome_trace
+
+    tracer = _obs.Tracer(enabled=True, host="bench")
+    prev = _obs.set_tracer(tracer)
+    try:
+        _drain(engine, qs, k, batch)
+    finally:
+        _obs.set_tracer(prev)
+    n_spans = write_chrome_trace(tracer, out_path)
+    load_chrome_trace(out_path)   # raises unless Perfetto-loadable
+    print(f"wrote {out_path} ({n_spans} spans, traced drain untimed)")
+
+
 def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
         batches=(1, 32), shards=(1, 8), out_json: str | None = None,
         sizes=None, csv_name: str = "serving.csv",
-        probe_backends=("host", "device"), hosts=(1,)):
+        probe_backends=("host", "device"), hosts=(1,),
+        trace_out: str | None = None):
     max_n = max_n or int(os.environ.get("REPRO_BENCH_MAX_N", 100_000))
     if sizes is None:
         sizes = [n for n in (10_000, 100_000, 1_000_000) if n <= max_n]
@@ -128,6 +149,12 @@ def run(max_n: int | None = None, nq: int = 64, ps=(64,), k: int = 10,
                          for mode in ("sequential", "pipelined")]
                 for pb, mode in cells:
                     engine = _engine_for(mode, db, p, S, pb)
+                    if trace_out is not None:
+                        # once, on the sweep's first cell: the trace
+                        # shows the span taxonomy, not the perf numbers
+                        _capture_trace(engine, qs, k, max(batches),
+                                       trace_out)
+                        trace_out = None
                     plan = getattr(engine, "plan", None)
                     n_dev = (
                         len({str(d) for d in plan.devices})
@@ -305,6 +332,9 @@ def _parse_args(argv=None):
     ap.add_argument("--out", type=str, default=None,
                     help="write a standalone JSON payload here instead of "
                          "merging into BENCH_engine.json (bench_check)")
+    ap.add_argument("--trace", type=str, default=None, metavar="OUT.json",
+                    help="capture ONE traced streaming drain (outside "
+                         "the timed reps) as a Chrome trace at this path")
     return ap.parse_args(argv)
 
 
@@ -314,4 +344,4 @@ if __name__ == "__main__":
         batches=tuple(sorted(set(a.batch))),
         shards=tuple(sorted(set(a.shards))), out_json=a.out,
         probe_backends=tuple(dict.fromkeys(a.probe_backend)),
-        hosts=tuple(sorted(set(a.hosts))))
+        hosts=tuple(sorted(set(a.hosts))), trace_out=a.trace)

@@ -63,6 +63,9 @@ _NAMESPACE_MODULES = (
     "repro.cluster",
     "repro.cluster.worker",
     "repro.cluster.transport",
+    "repro.obs.trace",
+    "repro.obs.metrics",
+    "repro.obs.export",
 )
 
 

@@ -16,6 +16,13 @@ python -m repro.pipeline.smoke
 # answer a mixed batch over the full wire protocol (build frames,
 # fan-out, bound broadcast, merge) bit-identical to linear_scan_knn.
 python -m repro.cluster.smoke
+# Trace smoke: a 2-localhost-worker cluster search with tracing on must
+# stay exact and export one Chrome trace whose report shows spans from
+# >= 2 worker hosts across >= 4 distinct stages (see docs/observability.md).
+OBS_TRACE="$(mktemp -t obs_smoke_XXXXXX.json)"
+trap 'rm -f "$OBS_TRACE"' EXIT
+python -m repro.obs.smoke --out "$OBS_TRACE"
+python -m repro.obs.report "$OBS_TRACE" --min-hosts 2 --min-stages 4
 # Docs-rot gate: every repo path / repro.* identifier cited in
 # README/docs/ROADMAP must still exist (see scripts/check_docs.py).
 python scripts/check_docs.py

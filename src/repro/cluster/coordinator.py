@@ -49,6 +49,7 @@ from ..core.engine import EngineStats, SearchEngine, register_engine
 from ..core.linear_scan import sims_for_ids
 from ..core.packing import WORD_DTYPE
 from ..core.single_table import SearchStats
+from ..obs import trace as _obs
 from ..pipeline.shardpool import prime_ids
 from ..shard.plan import ShardPlan
 from .transport import FrameError, recv_frame, send_frame, unpack_ragged
@@ -100,6 +101,14 @@ class _WorkerHandle:
         self.last_seen = time.monotonic()
         self.bound_frames = 0        # bound updates received from it
         self.reader: Optional[threading.Thread] = None
+        # cross-host clock calibration: the last ping's (seq, send-time
+        # in perf_counter us) and the offset estimated from its pong —
+        # worker_perf_counter_us - coordinator_perf_counter_us, so
+        # shifting worker span timestamps by -offset lands them on the
+        # coordinator timeline (~0 for localhost fleets: one kernel
+        # clock)
+        self.ping_sent: Optional[Tuple[int, float]] = None
+        self.clock_offset_us = 0.0
 
     def send(self, kind, meta=None, arrays=None) -> None:
         send_frame(self.sock, kind, meta, arrays, lock=self.send_lock)
@@ -115,6 +124,7 @@ class _Request:
         self.expected = set(hosts)
         self.floor = floor
         self.t0 = time.monotonic()
+        self.t0_us = _obs.now_us()   # same instant on the span clock
         # host -> (ids planes, sims planes, EngineStats, rpc seconds)
         self.results: Dict[int, Tuple[list, list, EngineStats, float]] = {}
         self.error: Optional[ClusterError] = None
@@ -203,6 +213,7 @@ class ClusterCoordinator:
                     self._mark_dead(h)
                     continue
                 try:
+                    h.ping_sent = (self._ping_seq, _obs.now_us())
                     h.send("ping", {"seq": self._ping_seq})
                 except OSError:
                     self._mark_dead(h)
@@ -218,7 +229,17 @@ class ClusterCoordinator:
                 elif kind == "bound":
                     self._on_bound(h, meta, arrays)
                 elif kind == "pong":
-                    pass
+                    # midpoint clock-offset estimate: the worker stamped
+                    # its perf_counter into the pong, and (send + recv)/2
+                    # approximates the coordinator time of that stamp
+                    # (symmetric-RTT assumption; error is bounded by
+                    # RTT/2, far below the millisecond spans we draw)
+                    ts = meta.get("ts")
+                    if ts is not None and h.ping_sent is not None and \
+                            int(meta.get("seq", -1)) == h.ping_sent[0]:
+                        t_recv = _obs.now_us()
+                        h.clock_offset_us = \
+                            float(ts) - (h.ping_sent[1] + t_recv) / 2.0
                 elif kind == "error":
                     with self._cond:
                         cur = self._current
@@ -258,6 +279,16 @@ class ClusterCoordinator:
             cur.results[h.host] = (
                 ids, sims, stats_from_wire(meta.get("stats", {})), elapsed
             )
+            tr = _obs.current()
+            if tr.enabled:
+                # one rpc span per host (send -> result landed), plus the
+                # worker's own spans shifted onto the coordinator clock
+                tr.record("cluster.rpc", cur.t0_us,
+                          cur.t0_us + elapsed * 1e6, cat="cluster",
+                          host=h.host, req=cur.req)
+                spans = meta.get("spans")
+                if spans:
+                    tr.ingest(spans, shift_us=h.clock_offset_us)
             self._cond.notify_all()
 
     def _on_bound(self, h, meta, arrays) -> None:
@@ -319,11 +350,19 @@ class ClusterCoordinator:
             cur = _Request(self._seq, B, [h.host for h in self.handles],
                            floor)
             self._current = cur
+        tr = _obs.current()
         try:
             for h in self.handles:
                 try:
-                    h.send("search", {"req": cur.req, "k": k},
-                           {"q": q, "floor": floor})
+                    smeta = {"req": cur.req, "k": k}
+                    if tr.enabled:
+                        # propagate the trace id so worker spans come
+                        # back under the same distributed trace; the
+                        # host tag keeps per-worker timelines apart
+                        smeta["trace"] = {
+                            "id": tr.trace_id, "host": f"host{h.host}",
+                        }
+                    h.send("search", smeta, {"q": q, "floor": floor})
                 except OSError:
                     self._mark_dead(h)
             deadline = cur.t0 + self.request_timeout
@@ -354,6 +393,10 @@ class ClusterCoordinator:
             with self._cond:
                 if cur.error is not None:
                     raise cur.error
+                if tr.enabled:
+                    tr.record("cluster.search", cur.t0_us, _obs.now_us(),
+                              cat="cluster", req=cur.req, B=B, k=k,
+                              hosts=len(cur.expected))
                 return cur.results, cur.floor
         finally:
             with self._cond:
@@ -537,6 +580,11 @@ class ClusterEngine(SearchEngine):
                             per_query=[SearchStats() for _ in range(B)],
                             shards=self.plan.num_shards),
             )
+        with _obs.current().span("engine.knn_batch", cat="engine",
+                                 backend=self.name, B=B, k=k_eff):
+            return self._knn_batch_traced(q, B, k_eff)
+
+    def _knn_batch_traced(self, q, B, k_eff):
         floor = np.full(B, -np.inf)
         primed: Optional[List[Tuple[np.ndarray, np.ndarray]]] = None
         if self.prime_bound:
@@ -561,6 +609,8 @@ class ClusterEngine(SearchEngine):
         with self._serial:
             by_host, _ = self.coordinator.search(q, k_eff, floor)
 
+        tr = _obs.current()
+        t_merge = _obs.now_us() if tr.enabled else 0.0
         ids_out = np.empty((B, k_eff), dtype=np.int64)
         sims_out = np.empty((B, k_eff), dtype=np.float64)
         order_hosts = sorted(by_host)
@@ -586,6 +636,9 @@ class ClusterEngine(SearchEngine):
             order = np.lexsort((gids, -sims))[:k_eff]
             ids_out[i] = gids[order]
             sims_out[i] = sims[order]
+        if tr.enabled:
+            tr.record("cluster.merge", t_merge, _obs.now_us(),
+                      cat="cluster", B=B, hosts=len(order_hosts))
 
         per_query: List[object] = []
         host_rows = [by_host[h][2].per_query for h in order_hosts]

@@ -44,6 +44,7 @@ import numpy as np
 from ..core.amih import AMIHStats
 from ..core.engine import EngineStats, make_engine
 from ..core.single_table import SearchStats
+from ..obs import trace as _obs
 from ..shard.plan import ShardPlan
 from .transport import FrameError, pack_ragged, recv_frame, send_frame
 
@@ -187,7 +188,7 @@ class WorkerServer:
                     searcher = threading.Thread(
                         target=self._run_search,
                         args=(conn, send_lock, engine, req, q, k_req,
-                              floor, dead),
+                              floor, dead, meta.get("trace")),
                         daemon=True,
                     )
                     searcher.start()
@@ -201,8 +202,12 @@ class WorkerServer:
                         if 0 <= i < floor.shape[0] and v > floor[i]:
                             floor[i] = v
                 elif kind == "ping":
-                    send_frame(conn, "pong", {"seq": meta.get("seq", 0)},
-                               lock=send_lock)
+                    # ts is this worker's perf_counter in microseconds —
+                    # the coordinator pairs it with the ping's send/recv
+                    # times to estimate the cross-host clock offset
+                    send_frame(conn, "pong", {
+                        "seq": meta.get("seq", 0), "ts": _obs.now_us(),
+                    }, lock=send_lock)
                 elif kind == "close":
                     break
                 else:
@@ -227,9 +232,23 @@ class WorkerServer:
                 engine.close()
 
     @staticmethod
-    def _run_search(conn, send_lock, engine, req, q, k_req, floor, dead):
+    def _run_search(conn, send_lock, engine, req, q, k_req, floor, dead,
+                    trace_meta=None):
         B = q.shape[0]
         sent = np.full(B, -np.inf)
+        # the coordinator's trace id rides the search frame's optional
+        # "trace" meta; install a per-request tracer process-wide so the
+        # engine/amih/kernel span sites below this thread all record into
+        # it (one search runs at a time per worker), then ship the spans
+        # back inside the result frame
+        tracer = prev_tracer = None
+        if trace_meta:
+            tracer = _obs.Tracer(
+                enabled=True,
+                host=str(trace_meta.get("host", "worker")),
+                trace_id=trace_meta.get("id"),
+            )
+            prev_tracer = _obs.set_tracer(tracer)
 
         def publish(qi: int, _ids, sims) -> None:
             # only a k-th best of >= k_req REAL rows is a valid global
@@ -261,9 +280,11 @@ class WorkerServer:
             sims_flat, _ = pack_ragged(
                 [r[1] for r in results], dtype=np.float64
             )
+            meta_out = {"req": req, "stats": stats_to_wire(st)}
+            if tracer is not None:
+                meta_out["spans"] = tracer.drain()
             if not dead.is_set():
-                send_frame(conn, "result",
-                           {"req": req, "stats": stats_to_wire(st)},
+                send_frame(conn, "result", meta_out,
                            {"ids": ids_flat, "sims": sims_flat,
                             "lens": lens},
                            lock=send_lock)
@@ -276,6 +297,9 @@ class WorkerServer:
                     }, lock=send_lock)
                 except OSError:
                     pass
+        finally:
+            if tracer is not None:
+                _obs.set_tracer(prev_tracer)
 
 
 def serve(host: str = "127.0.0.1", port: int = 0, announce=None) -> None:

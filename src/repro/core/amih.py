@@ -54,6 +54,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _obs
 from .enumeration import tuple_bucket_values
 from .packing import (
     WORD_DTYPE,
@@ -505,6 +506,10 @@ class AMIHIndex:
     ) -> None:
         """One z-group's strict probe -> verify -> bucket -> emit loop."""
         r_hat = rhat(z)
+        # spans observe the loop, never reorder it: the traced path runs
+        # the identical statements, it only reads the clock around them
+        tr = _obs.current()
+        traced = tr.enabled
         for (r1, r2) in self._probing_iter(z):
             active = [s for s in states if not s.done]
             if not active:
@@ -521,6 +526,7 @@ class AMIHIndex:
                 if not active:
                     break
             # 1. probe: per-query table lookups -> fresh candidate ids
+            t0 = _obs.now_us() if traced else 0.0
             fresh_states: List[_QueryState] = []
             fresh_blocks: List[np.ndarray] = []
             for s in active:
@@ -530,11 +536,17 @@ class AMIHIndex:
                         s.stats.verified += fresh.size
                     fresh_states.append(s)
                     fresh_blocks.append(fresh)
+            if traced:
+                tr.record("amih.probe", t0, _obs.now_us(), cat="amih",
+                          z=z, r1=r1, r2=r2, queries=len(active))
             # 2+3. verify the whole z-group in one call and bucket
             if fresh_blocks:
                 self._verify_and_bucket(fresh_states, fresh_blocks)
             # 4. emit this tuple's bucket per query
+            t0 = _obs.now_us() if traced else 0.0
             self._emit_tuple(active, r1, r2, s_val, k)
+            if traced:
+                tr.record("amih.emit", t0, _obs.now_us(), cat="amih", z=z)
             if on_done is not None:
                 self._notify_done(active, on_done)
 
@@ -726,9 +738,20 @@ class AMIHIndex:
         only the index and the DB — safe to run on a worker thread while
         the main thread probes the next tuple step (pipeline/overlap.py);
         the mutable bucketing stays on the caller's thread."""
+        tr = _obs.current()
+        if not tr.enabled:
+            if self.verify_backend == "pallas":
+                return self._verify_group_pallas(states, blocks)
+            return self._verify_group_numpy(states, blocks)
+        t0 = _obs.now_us()
         if self.verify_backend == "pallas":
-            return self._verify_group_pallas(states, blocks)
-        return self._verify_group_numpy(states, blocks)
+            out = self._verify_group_pallas(states, blocks)
+        else:
+            out = self._verify_group_numpy(states, blocks)
+        tr.record("amih.verify", t0, _obs.now_us(), cat="amih",
+                  backend=self.verify_backend, queries=len(states),
+                  candidates=int(sum(b.size for b in blocks)))
+        return out
 
     def _bucket_keys(
         self,
@@ -738,6 +761,8 @@ class AMIHIndex:
     ) -> None:
         """Bucketing half of ``_verify_and_bucket``: group each query's
         candidates by packed key into its pending dict."""
+        tr = _obs.current()
+        t0 = _obs.now_us() if tr.enabled else 0.0
         pp = self.p + 1
         for state, cand, keys in zip(states, blocks, keys_list):
             order = np.argsort(keys, kind="stable")
@@ -751,6 +776,9 @@ class AMIHIndex:
                 pending.setdefault((kk // pp, kk % pp), []).append(
                     cand[order[lo:hi]]
                 )
+        if tr.enabled:
+            tr.record("amih.bucket", t0, _obs.now_us(), cat="amih",
+                      queries=len(states))
 
     def _verify_group_numpy(
         self, states: List[_QueryState], blocks: List[np.ndarray]

@@ -39,6 +39,7 @@ from typing import Any, ClassVar, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _obs
 from .amih import AMIHIndex, AMIHStats
 from .enumeration import EnumerationCapExceeded
 from .linear_scan import (
@@ -139,6 +140,10 @@ class SearchEngine(abc.ABC):
 
     name: ClassVar[str]
 
+    #: the Tracer handed to ``make_engine(..., tracer=...)``, if any —
+    #: kept on the engine so callers can drain/export its spans.
+    tracer = None
+
     @classmethod
     @abc.abstractmethod
     def build(
@@ -192,9 +197,9 @@ def probe_cache_snapshot() -> Dict[str, int]:
     schedule/stack cache when the device probe path has been imported.
     Engines stamp this into ``EngineStats.cache_info`` per batch, so the
     benchmark rows can report cache effectiveness per cell."""
-    from .probing import probing_cache_stats
+    from .probing import _cache_stats
 
-    out: Dict[str, int] = dict(probing_cache_stats())
+    out: Dict[str, int] = dict(_cache_stats())
     import sys
 
     mod = sys.modules.get(__package__ + ".probe_device")
@@ -269,7 +274,20 @@ def make_engine(
     callers of the host backends never pay the jax import. Engines that
     hold workers ("amih" with ``overlap_verify``, "sharded_amih" with
     ``probe_workers``) expose ``close()``; GC closes them too.
+
+    ``tracer=`` (a ``repro.obs.Tracer``) threads end-to-end tracing
+    through: it is installed as the process tracer — the instrumentation
+    sites at every layer read one process-wide tracer, since kernel
+    launch sites cannot know which engine they serve — and attached to
+    the returned engine as ``engine.tracer`` for draining/export.
+    Tracing is off unless the tracer is enabled; spans observe, never
+    reorder, so results are bit-identical either way.
     """
+    tracer = cfg.pop("tracer", None)
+    if tracer is not None:
+        from ..obs import trace as _obs_trace
+
+        _obs_trace.set_tracer(tracer)
     cls = ENGINES.get(backend)
     if cls is None and backend.startswith("sharded"):
         try:
@@ -286,7 +304,9 @@ def make_engine(
             f"unknown search backend {backend!r}; "
             f"available: {available_backends()}"
         )
-    return cls.build(db_words, p, **cfg)
+    eng = cls.build(db_words, p, **cfg)
+    eng.tracer = tracer
+    return eng
 
 
 @register_engine
@@ -369,6 +389,11 @@ class LinearScanEngine(SearchEngine):
         q = self._check_queries(q_words, self.p)
         B = q.shape[0]
         k_eff = min(k, self.n)
+        with _obs.current().span("engine.knn_batch", cat="engine",
+                                 backend=self.name, B=B, k=k_eff):
+            return self._knn_batch_traced(q, B, k_eff)
+
+    def _knn_batch_traced(self, q, B, k_eff):
         if self.compute_backend == "pallas" and k_eff > 0:
             ids_out, sims_out = self._knn_batch_device(q, k_eff)
         else:
@@ -470,6 +495,11 @@ class SingleTableEngine(SearchEngine):
         q = self._check_queries(q_words, self.p)
         B = q.shape[0]
         k_eff = min(k, self.n)
+        with _obs.current().span("engine.knn_batch", cat="engine",
+                                 backend=self.name, B=B, k=k_eff):
+            return self._knn_batch_traced(q, B, k_eff)
+
+    def _knn_batch_traced(self, q, B, k_eff):
         zs = popcount(q)
         ids_out = np.empty((B, k_eff), dtype=np.int64)
         sims_out = np.empty((B, k_eff), dtype=np.float64)
@@ -614,6 +644,11 @@ class AMIHEngine(SearchEngine):
         q = self._check_queries(q_words, self.p)
         B = q.shape[0]
         k_eff = min(k, self.n)
+        with _obs.current().span("engine.knn_batch", cat="engine",
+                                 backend=self.name, B=B, k=k_eff):
+            return self._knn_batch_traced(q, B, k_eff)
+
+    def _knn_batch_traced(self, q, B, k_eff):
         cache = self._query_cache if self.query_cache_size > 0 else None
 
         # Split rows into cache hits and (deduplicated) misses. Duplicate

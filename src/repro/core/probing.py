@@ -26,10 +26,12 @@ from __future__ import annotations
 
 import heapq
 import threading
+import warnings
 from collections import OrderedDict
 from fractions import Fraction
 from typing import Iterator, List, Optional, Tuple
 
+from ..obs.metrics import REGISTRY as _REG
 from .tuples import is_valid_tuple, rhat, sim_squared_fraction, sim_value
 
 __all__ = [
@@ -167,10 +169,12 @@ def _seq_entry(p: int, z: int) -> _SeqEntry:
         entry = _SEQ_CACHE.get((p, z))
         if entry is None:
             _SEQ_MISSES += 1
+            _REG.counter("cache.probing.misses").add(1)
             entry = _SeqEntry(p, z)
             _SEQ_CACHE[(p, z)] = entry
         else:
             _SEQ_HITS += 1
+            _REG.counter("cache.probing.hits").add(1)
             _SEQ_CACHE.move_to_end((p, z))
         while len(_SEQ_CACHE) > _SEQ_CACHE_MAX:
             _SEQ_CACHE.popitem(last=False)
@@ -220,10 +224,12 @@ def probing_cache_info() -> Tuple[int, int]:
         )
 
 
-def probing_cache_stats() -> dict:
+def _cache_stats() -> dict:
     """Occupancy plus process-lifetime hit/miss counters of the shared
     (p, z) sequence cache — surfaced through ``EngineStats.cache_info``
-    and the benchmark rows so cache effectiveness is visible per cell."""
+    and the benchmark rows so cache effectiveness is visible per cell.
+    Hit/miss counters are mirrored into the metrics registry as
+    ``cache.probing.hits`` / ``cache.probing.misses``."""
     with _SEQ_LOCK:
         return {
             "probing_entries": len(_SEQ_CACHE),
@@ -233,3 +239,15 @@ def probing_cache_stats() -> dict:
             "probing_hits": _SEQ_HITS,
             "probing_misses": _SEQ_MISSES,
         }
+
+
+def probing_cache_stats() -> dict:
+    """Deprecated alias of the internal cache-stat snapshot: new code
+    reads the ``cache.probing.*`` counters off the metrics registry (or
+    ``EngineStats.cache_info``, which engines still populate)."""
+    warnings.warn(
+        "probing_cache_stats() is deprecated; read the cache.probing.* "
+        "counters from repro.obs.metrics.REGISTRY instead",
+        DeprecationWarning, stacklevel=2,
+    )
+    return _cache_stats()

@@ -11,12 +11,16 @@ from __future__ import annotations
 
 import functools
 import threading
+import warnings
+from collections.abc import Mapping
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import trace as _obs
+from ..obs.metrics import REGISTRY as _REG
 from . import ref
 from .hamming_scan import DEFAULT_BLK_N, DEFAULT_BLK_Q, hamming_scan_scores
 from .verify_tuples import DEFAULT_BLK_C
@@ -43,23 +47,46 @@ __all__ = [
     "verify_tuples_op",
 ]
 
-# Host-side launch accounting: bumped once per device dispatch of each op.
+# Host-side launch accounting: bumped once per device dispatch of each op,
+# into the process metrics registry under ``launches.<op>``.
 # AMIH's batched verification asserts exactly one grouped launch per
 # (z-group, tuple-step) through this counter (see tests/test_verify_grouped);
 # the device probe path asserts O(1) launches per z-group through
 # "device_probe" (the fused walk) and "device_probe_scan" (the at-most-one
 # exhaustive fallback for truncated schedules).
-LAUNCH_COUNTS = {
-    "verify_grouped": 0,
-    "verify": 0,
-    "device_probe": 0,
-    "device_probe_scan": 0,
-}
+_LAUNCH_KEYS = ("verify_grouped", "verify", "device_probe",
+                "device_probe_scan")
+
+
+class _DeprecatedLaunchCounts(Mapping):
+    """The old ``ops.LAUNCH_COUNTS`` dict surface, now a read-only view
+    of the ``launches.*`` registry counters. Direct reads warn — new
+    code reads ``repro.obs.metrics.REGISTRY.value("launches.<op>")``."""
+
+    def __getitem__(self, key: str) -> int:
+        warnings.warn(
+            "ops.LAUNCH_COUNTS is deprecated; read "
+            "repro.obs.metrics.REGISTRY.value('launches.<op>') instead",
+            DeprecationWarning, stacklevel=2,
+        )
+        if key not in _LAUNCH_KEYS:
+            raise KeyError(key)
+        return _REG.value("launches." + key)
+
+    def __iter__(self):
+        return iter(_LAUNCH_KEYS)
+
+    def __len__(self) -> int:
+        return len(_LAUNCH_KEYS)
+
+
+LAUNCH_COUNTS = _DeprecatedLaunchCounts()
 
 # Per-device split of the grouped-verify launches: device key -> count.
 # The mesh-resident sharded AMIH path places each shard's verification on
 # that shard's assigned device; tests assert the placement actually
 # happened (not just that the arrays were tagged) through this counter.
+# Mirrored into the registry as ``launches.device.<dkey>``.
 LAUNCH_COUNTS_BY_DEVICE: dict = {}
 
 # Guards the counter bumps: thread-mode shard probing (forced for the
@@ -67,6 +94,18 @@ LAUNCH_COUNTS_BY_DEVICE: dict = {}
 # dict get+store is not atomic — an unguarded bump could drop counts the
 # placement tests assert on.
 _LAUNCH_LOCK = threading.Lock()
+
+
+def _bump_launch(op: str, dkey: "str | None" = None) -> None:
+    """One device dispatch of ``op``: bump ``launches.<op>`` (and the
+    per-device split when the launch was placed)."""
+    _REG.counter("launches." + op).add(1)
+    if dkey is not None:
+        _REG.counter("launches.device." + dkey).add(1)
+        with _LAUNCH_LOCK:
+            LAUNCH_COUNTS_BY_DEVICE[dkey] = (
+                LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+            )
 
 
 def device_key(device) -> str:
@@ -301,12 +340,13 @@ def verify_tuples_op(
         use_pallas = on_tpu()
     if not use_pallas:
         return ref.verify_tuples_ref(q_words, cand_words)
-    LAUNCH_COUNTS["verify"] += 1
+    _bump_launch("verify")
     blk = min(blk_n, max(8, N))
     cp = _pad_to(cand_words, 0, blk)
-    r10, r01 = _verify_tuples_kernel(
-        q_words, cp, blk_n=blk, interpret=not on_tpu()
-    )
+    with _obs.current().span("launch.verify", cat="kernel", n=N):
+        r10, r01 = _verify_tuples_kernel(
+            q_words, cp, blk_n=blk, interpret=not on_tpu()
+        )
     return r10[:N], r01[:N]
 
 
@@ -389,15 +429,23 @@ class PendingKeys:
     (B, C) host array (blocking until the launch and transfer complete).
     """
 
-    __slots__ = ("_keys", "_B", "_C")
+    __slots__ = ("_keys", "_B", "_C", "_dkey")
 
-    def __init__(self, keys, B: int, C: int):
+    def __init__(self, keys, B: int, C: int, dkey: str = "default"):
         self._keys = keys
         self._B = B
         self._C = C
+        self._dkey = dkey
 
     def get(self) -> np.ndarray:
-        return np.asarray(self._keys)[: self._B, : self._C]
+        tr = _obs.current()
+        if not tr.enabled:
+            return np.asarray(self._keys)[: self._B, : self._C]
+        t0 = _obs.now_us()
+        out = np.asarray(self._keys)[: self._B, : self._C]
+        tr.record("launch.verify_grouped.resolve", t0, _obs.now_us(),
+                  cat="kernel", device=self._dkey)
+        return out
 
 
 def verify_tuples_grouped_launch(
@@ -451,22 +499,20 @@ def verify_tuples_grouped_launch(
     else:
         qp = _pad_to(jnp.asarray(q_words), 0, Bp)
     dkey = device_key(device)
-    with _LAUNCH_LOCK:
-        LAUNCH_COUNTS["verify_grouped"] += 1
-        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
-            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+    _bump_launch("verify_grouped", dkey)
+    with _obs.current().span("launch.verify_grouped.dispatch",
+                             cat="kernel", device=dkey, B=B, C=C):
+        keys = _gather_verify_grouped_for(device)(
+            qp,
+            db_words,
+            jnp.asarray(idxp),
+            jnp.asarray(lensp),
+            p=p,
+            blk_c=blk,
+            use_pallas=use_pallas,
+            interpret=not on_tpu(),
         )
-    keys = _gather_verify_grouped_for(device)(
-        qp,
-        db_words,
-        jnp.asarray(idxp),
-        jnp.asarray(lensp),
-        p=p,
-        blk_c=blk,
-        use_pallas=use_pallas,
-        interpret=not on_tpu(),
-    )
-    return PendingKeys(keys, B, C)
+    return PendingKeys(keys, B, C, dkey)
 
 
 def _probe_put(arrays, device):
@@ -562,42 +608,40 @@ def device_probe_walk_launch(
     )
     bundle = sched.device_arrays(device)
     dkey = device_key(device)
-    with _LAUNCH_LOCK:
-        LAUNCH_COUNTS["device_probe"] += 1
-        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
-            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+    _bump_launch("device_probe", dkey)
+    with _obs.current().span("launch.device_probe", cat="kernel",
+                             device=dkey, B=B):
+        posmap, probes, retrieved, done, cursor, iters = (
+            device_probe.device_probe_walk(
+                *per_call,
+                bundle["tbl"],
+                bundle["step_ext"],
+                bundle["idx1"],
+                bundle["idx0"],
+                bundle["maxi1"],
+                bundle["maxi0"],
+                bundle["widths"],
+                csr["offsets"],
+                csr["ids"],
+                csr["db_pad"],
+                bundle["inv_pos"],
+                p=p,
+                tile=tile,
+                cap=cap,
+                kmax=KMAX,
+                check_every=check_every,
+                use_pallas=use_pallas,
+                interpret=not on_tpu(),
+            )
         )
-    posmap, probes, retrieved, done, cursor, iters = (
-        device_probe.device_probe_walk(
-            *per_call,
-            bundle["tbl"],
-            bundle["step_ext"],
-            bundle["idx1"],
-            bundle["idx0"],
-            bundle["maxi1"],
-            bundle["maxi0"],
-            bundle["widths"],
-            csr["offsets"],
-            csr["ids"],
-            csr["db_pad"],
-            bundle["inv_pos"],
-            p=p,
-            tile=tile,
-            cap=cap,
-            kmax=KMAX,
-            check_every=check_every,
-            use_pallas=use_pallas,
-            interpret=not on_tpu(),
-        )
-    )
-    return {
-        "posmap": np.asarray(posmap)[:B],
-        "probes": np.asarray(probes)[:B],
-        "retrieved": np.asarray(retrieved)[:B],
-        "done": np.asarray(done)[:B],
-        "cursor": int(cursor),
-        "iters": int(iters),
-    }
+        return {
+            "posmap": np.asarray(posmap)[:B],
+            "probes": np.asarray(probes)[:B],
+            "retrieved": np.asarray(retrieved)[:B],
+            "done": np.asarray(done)[:B],
+            "cursor": int(cursor),
+            "iters": int(iters),
+        }
 
 
 def device_probe_scan_launch(
@@ -628,22 +672,20 @@ def device_probe_scan_launch(
     per_call = _probe_put([qp, np.int32(csr["n"])], device)
     bundle = sched.device_arrays(device)
     dkey = device_key(device)
-    with _LAUNCH_LOCK:
-        LAUNCH_COUNTS["device_probe_scan"] += 1
-        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
-            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
+    _bump_launch("device_probe_scan", dkey)
+    with _obs.current().span("launch.device_probe_scan", cat="kernel",
+                             device=dkey, B=B):
+        pm = device_probe.device_probe_scan(
+            per_call[0],
+            csr["db_pad"],
+            bundle["inv_pos"],
+            per_call[1],
+            p=p,
+            chunk=chunk,
+            use_pallas=use_pallas,
+            interpret=not on_tpu(),
         )
-    pm = device_probe.device_probe_scan(
-        per_call[0],
-        csr["db_pad"],
-        bundle["inv_pos"],
-        per_call[1],
-        p=p,
-        chunk=chunk,
-        use_pallas=use_pallas,
-        interpret=not on_tpu(),
-    )
-    return np.asarray(pm)[:B]
+        return np.asarray(pm)[:B]
 
 
 # Recycled (B_pad, n_pad) position-map scratch buffers, per placement
@@ -697,6 +739,8 @@ class PendingWalk:
 
     def get(self) -> dict:
         if self._res is None:
+            tr = _obs.current()
+            t0 = _obs.now_us() if tr.enabled else 0.0
             posmap, probes, retrieved, done, cursor, iters = self._out
             self._res = {
                 "posmap": np.array(posmap)[: self._B],
@@ -708,6 +752,10 @@ class PendingWalk:
             }
             _recycle_posmap(self._pool_key, posmap)
             self._out = None
+            if tr.enabled:
+                tr.record("launch.device_probe.resolve", t0,
+                          _obs.now_us(), cat="kernel",
+                          device=self._pool_key[0])
         return self._res
 
 
@@ -802,11 +850,7 @@ def device_probe_walk_batched_launch(
     bundle = stack.device_arrays(device)
     pool_key, posmap_in = _take_posmap(device, Bp, int(csr["n_pad"]))
     dkey = device_key(device)
-    with _LAUNCH_LOCK:
-        LAUNCH_COUNTS["device_probe"] += 1
-        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
-            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
-        )
+    _bump_launch("device_probe", dkey)
     fn = _device_fn(
         device,
         "walk_batched",
@@ -819,6 +863,8 @@ def device_probe_walk_batched_launch(
             donate_argnames=("posmap_in",),
         ),
     )
+    _tr = _obs.current()
+    _t0 = _obs.now_us() if _tr.enabled else 0.0
     out = fn(
         posmap_in,
         *per_call,
@@ -843,6 +889,9 @@ def device_probe_walk_batched_launch(
         use_pallas=use_pallas,
         interpret=not on_tpu(),
     )
+    if _tr.enabled:
+        _tr.record("launch.device_probe.dispatch", _t0, _obs.now_us(),
+                   cat="kernel", device=dkey, B=B)
     pending = PendingWalk(out, B, pool_key)
     return pending.get() if blocking else pending
 
@@ -878,11 +927,7 @@ def device_probe_scan_multi_launch(
     per_call = _probe_put([qp, gp, np.int32(csr["n"])], device)
     bundle = stack.device_arrays(device)
     dkey = device_key(device)
-    with _LAUNCH_LOCK:
-        LAUNCH_COUNTS["device_probe_scan"] += 1
-        LAUNCH_COUNTS_BY_DEVICE[dkey] = (
-            LAUNCH_COUNTS_BY_DEVICE.get(dkey, 0) + 1
-        )
+    _bump_launch("device_probe_scan", dkey)
     fn = _device_fn(
         device,
         "scan_multi",
@@ -891,18 +936,20 @@ def device_probe_scan_multi_launch(
             static_argnames=("p", "chunk", "use_pallas", "interpret"),
         ),
     )
-    pm = fn(
-        per_call[0],
-        per_call[1],
-        csr["db_pad"],
-        bundle["inv_pos"],
-        per_call[2],
-        p=p,
-        chunk=chunk,
-        use_pallas=use_pallas,
-        interpret=not on_tpu(),
-    )
-    return np.asarray(pm)[:B]
+    with _obs.current().span("launch.device_probe_scan", cat="kernel",
+                             device=dkey, B=B):
+        pm = fn(
+            per_call[0],
+            per_call[1],
+            csr["db_pad"],
+            bundle["inv_pos"],
+            per_call[2],
+            p=p,
+            chunk=chunk,
+            use_pallas=use_pallas,
+            interpret=not on_tpu(),
+        )
+        return np.asarray(pm)[:B]
 
 
 def verify_tuples_grouped_op(

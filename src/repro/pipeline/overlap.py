@@ -37,6 +37,7 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from typing import List, Optional
 
 from ..core.tuples import rhat, sim_value
+from ..obs import trace as _obs
 
 __all__ = ["VerifyOverlap"]
 
@@ -132,12 +133,18 @@ class VerifyOverlap:
                     (bound_stopped if s_val < stop_below[s.qi]
                      else probing).append(s)
             # 1. probe step t on the host while step t-1 verifies.
+            tr = _obs.current()
+            t0 = _obs.now_us() if tr.enabled else 0.0
             fresh_states, fresh_blocks = [], []
             for s in probing:
                 fresh = index._probe_step(s, r1, r2, r_hat, enumeration_cap)
                 if fresh.size:
                     fresh_states.append(s)
                     fresh_blocks.append(fresh)
+            if tr.enabled:
+                tr.record("amih.probe", t0, _obs.now_us(), cat="amih",
+                          z=z, r1=r1, r2=r2, queries=len(probing),
+                          overlapped=True)
             # 2. flush step t-1: join its verification, bucket, emit.
             if prev is not None:
                 self._flush(index, states, k, prev, on_done)
@@ -181,6 +188,11 @@ class VerifyOverlap:
         if keys is not None:
             index._bucket_keys(step.states, step.blocks, keys)
         emitted = [s for s in states if not s.done]
+        tr = _obs.current()
+        t0 = _obs.now_us() if tr.enabled else 0.0
         index._emit_tuple(emitted, step.r1, step.r2, step.s_val, k)
+        if tr.enabled:
+            tr.record("amih.emit", t0, _obs.now_us(), cat="amih",
+                      overlapped=True)
         if on_done is not None:
             index._notify_done(emitted, on_done)

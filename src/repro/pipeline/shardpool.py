@@ -68,6 +68,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..obs import trace as _obs
+
 __all__ = [
     "PersistentShardPool",
     "SharedBound",
@@ -251,8 +253,22 @@ def _run_pool_task(group, lead, stats_factory, result_conn, shm,
     jax — so running in a fork-child of a jax-initialized parent is
     safe. A separate function so every view of ``shm.buf`` (including
     the ones captured by the gate/on_done closures) is dead before the
-    caller closes the segment."""
-    B, q_words, k, enumeration_cap, floor = task
+    caller closes the segment.
+
+    ``trace_meta`` (the task's optional 6th element) carries the
+    parent's trace id when tracing is on: the child installs a matching
+    tracer and ships each shard's spans back on the SAME result pipe,
+    tagged with its pid (stamped at record time) and shard id — fork
+    children share the parent's CLOCK_MONOTONIC base, so the spans land
+    on the parent timeline without adjustment."""
+    B, q_words, k, enumeration_cap, floor, trace_meta = task
+    tracer = _obs.Tracer(enabled=False)
+    if trace_meta:
+        tracer = _obs.Tracer(
+            enabled=True, host=trace_meta.get("host", "local"),
+            trace_id=trace_meta.get("id"),
+        )
+    _obs.set_tracer(tracer)
     bounds = np.frombuffer(shm.buf, dtype=np.float64, count=B)
     gate = np.frombuffer(shm.buf, dtype=np.uint8, count=1, offset=8 * B)
     try:
@@ -271,8 +287,13 @@ def _run_pool_task(group, lead, stats_factory, result_conn, shm,
                 q_words, k, stop_below=bounds, stats=st,
                 enumeration_cap=enumeration_cap, on_done=on_done,
             )
+            spans = None
+            if trace_meta:
+                spans = tracer.drain()
+                for sp in spans:
+                    sp.setdefault("args", {})["shard"] = s
             result_conn.send(("shard", s, results, st,
-                              index.verify_launches - launches0))
+                              index.verify_launches - launches0, spans))
             if on_first is not None:
                 on_first()
                 on_first = None
@@ -548,11 +569,16 @@ class PersistentShardPool:
             seg[:] = shared.bounds
             shared.bounds = seg          # live view for parent offers
             floor = seg.copy()
+            tr = _obs.current()
+            trace_meta = (
+                {"id": tr.trace_id, "host": tr.host} if tr.enabled
+                else None
+            )
             for w, (_, task_conn, _) in enumerate(self._procs):
                 try:
                     task_conn.send((
                         "probe", shm.name, B, q_words, k, enumeration_cap,
-                        None if w == 0 else floor,
+                        None if w == 0 else floor, trace_meta,
                     ))
                 except OSError as e:
                     # a worker died between calls: its task pipe is
@@ -601,7 +627,10 @@ class PersistentShardPool:
                     del live[conn]
                     continue
                 if msg[0] == "shard":
-                    _, s, results, st, launches = msg
+                    _, s, results, st, launches, spans = msg
+                    if spans:
+                        # same machine, shared monotonic clock: no shift
+                        _obs.current().ingest(spans)
                     out[s] = (results, st, launches)
                     for qi, (r_ids, r_sims) in enumerate(results):
                         shared.offer(qi, r_ids, r_sims)

@@ -31,6 +31,8 @@ from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Iterator, List, Optional, Sequence
 
+from ..obs import trace as _obs
+
 __all__ = ["Stage", "StagedExecutor"]
 
 
@@ -75,11 +77,14 @@ class StagedExecutor:
 
     # ------------------------------------------------------------ plumbing
     @staticmethod
-    def _run_stage(fn, prev: Optional[Future], item):
+    def _run_stage(name, fn, prev: Optional[Future], item):
         """Stage body: wait for the upstream result (FIFO worker — nothing
-        else could run meanwhile), then apply this stage."""
+        else could run meanwhile), then apply this stage. The span covers
+        only this stage's own work, not the upstream wait — queueing time
+        would otherwise inflate every downstream stage's cost."""
         x = item if prev is None else prev.result()
-        return fn(x)
+        with _obs.current().span(f"stage.{name}", cat="pipeline"):
+            return fn(x)
 
     def submit(self, item) -> Future:
         """Push one item through every stage; returns the LAST stage's
@@ -88,7 +93,8 @@ class StagedExecutor:
             raise RuntimeError("StagedExecutor is closed")
         fut: Optional[Future] = None
         for stage, pool in zip(self.stages, self._pools):
-            fut = pool.submit(self._run_stage, stage.fn, fut, item)
+            fut = pool.submit(self._run_stage, stage.name, stage.fn, fut,
+                              item)
             item = None   # only the first stage sees the raw item
         assert fut is not None
         return fut

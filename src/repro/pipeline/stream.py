@@ -37,6 +37,8 @@ from typing import Any, Callable, Dict, Iterator, List, Optional, Sequence, Tupl
 
 import numpy as np
 
+from ..obs import trace as _obs
+from ..obs.metrics import REGISTRY as _REG, Histogram
 from .stages import Stage, StagedExecutor
 
 __all__ = ["LatencyTracker", "StepResult", "Ticket", "stream_search"]
@@ -80,30 +82,21 @@ class Ticket:
         return f"Ticket(qid={self.qid}, {state})"
 
 
-class LatencyTracker:
+class LatencyTracker(Histogram):
     """Rolling latency percentiles over answered queries (thread-safe).
 
-    Keeps the most recent ``window`` samples — serving dashboards want
-    recent p50/p99, not all-time — and snapshots them into the dict that
-    lands on ``EngineStats.latency_ms``.
+    A ``repro.obs.metrics.Histogram`` (same bounded window, same locks)
+    keeping its historical snapshot shape: interpolated np.percentile
+    values rounded to 4 places with a float ``count`` — the dict that
+    lands on ``EngineStats.latency_ms``. Dashboards want recent p50/p99,
+    not all-time, so only the last ``window`` samples score.
     """
 
     def __init__(self, window: int = 4096):
-        self.window = window
-        self._samples: List[float] = []
-        self._count = 0
-        self._lock = threading.Lock()
+        super().__init__(window)
 
     def record(self, ms: float, count: int = 1) -> None:
-        with self._lock:
-            self._samples.extend([float(ms)] * count)
-            self._count += count
-            if len(self._samples) > self.window:
-                del self._samples[: len(self._samples) - self.window]
-
-    @property
-    def count(self) -> int:
-        return self._count
+        super().record(float(ms), count)
 
     def snapshot(self) -> Dict[str, float]:
         """{"p50": ..., "p99": ..., "mean": ..., "count": ...} in ms over
@@ -184,8 +177,17 @@ def stream_search(
         [Stage("encode", _enc), Stage("search", _search)],
         window=window, name="serve",
     ) as ex:
+        tr = _obs.current()
         for i, ids, sims, stats in ex.map(_feed()):
-            lat_ms = 1e3 * (time.perf_counter() - enqueue_t[i])
+            done_t = time.perf_counter()
+            lat_ms = 1e3 * (done_t - enqueue_t[i])
+            if tr.enabled:
+                # enqueue_t and now_us share the perf_counter clock
+                tr.record("serve.step", enqueue_t[i] * 1e6, done_t * 1e6,
+                          cat="serve", step=i, B=int(ids.shape[0]))
+            _REG.histogram("serve.latency_ms").record(
+                lat_ms, count=max(1, ids.shape[0])
+            )
             stats.queue_depth = int(behind[i])
             if stamp_latency:
                 tracker.record(lat_ms, count=max(1, ids.shape[0]))

@@ -118,6 +118,14 @@ class RetrievalConfig:
     # the queued/streaming serving loop is unchanged on top.
     cluster: bool = False
     hosts: int = 2
+    # End-to-end tracing (repro.obs): True installs an enabled Tracer at
+    # build_index time (a float in (0, 1] additionally samples top-level
+    # spans at that probability). Spans from every layer — engine,
+    # AMIH probe/verify, kernel launches, and (cluster=True) the
+    # cross-host worker spans — land on ``service.engine.tracer``;
+    # export with repro.obs.export.write_chrome_trace. Off by default:
+    # the disabled path is a single attribute check per span site.
+    trace: object = False
 
     @property
     def engine(self) -> str:
@@ -294,6 +302,16 @@ class RetrievalService:
                     probe_fused=self.rcfg.probe_fused,
                 )
             backend = "cluster"
+        if self.rcfg.trace:
+            from ..obs import trace as _obs_trace
+
+            sample = (
+                float(self.rcfg.trace)
+                if isinstance(self.rcfg.trace, float) else 1.0
+            )
+            cfg["tracer"] = _obs_trace.Tracer(
+                enabled=True, sample=sample, host="coordinator",
+            )
         self.engine = make_engine(
             backend, self.db_words, self.rcfg.code_bits, **cfg
         )

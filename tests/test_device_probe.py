@@ -21,6 +21,7 @@ from repro.core.probe_device import (
     schedule_cache_info,
 )
 from repro.kernels import ops
+from repro.obs.metrics import REGISTRY as _REG
 
 
 def _make_data(n, p, B, seed=0, clustered=False):
@@ -108,13 +109,13 @@ def test_truncated_stream_falls_back_to_scan():
     host = AMIHIndex.build(db, p, probe_backend="host")
     dev = AMIHIndex.build(db, p, probe_backend="device",
                           probe_stream_cap=64)
-    before = ops.LAUNCH_COUNTS["device_probe_scan"]
+    before = _REG.value("launches.device_probe_scan")
     stats = [AMIHStats() for _ in range(q.shape[0])]
     ih, sh = host.knn_batch(q, k)
     id_, sd = dev.knn_batch(q, k, stats=stats)
     np.testing.assert_array_equal(sh, sd)
     _check_vs_scan(q, db, id_, sd, k)
-    assert ops.LAUNCH_COUNTS["device_probe_scan"] > before
+    assert _REG.value("launches.device_probe_scan") > before
     assert any(st.fell_back_to_scan for st in stats)
 
 
@@ -138,19 +139,19 @@ def test_one_walk_launch_per_batch():
     dev = AMIHIndex.build(db, p, probe_backend="device")
     groups = len(np.unique(np.bitwise_count(q).sum(axis=1)))
     assert groups > 1             # the fusion must actually fuse something
-    walk0 = ops.LAUNCH_COUNTS["device_probe"]
-    scan0 = ops.LAUNCH_COUNTS["device_probe_scan"]
+    walk0 = _REG.value("launches.device_probe")
+    scan0 = _REG.value("launches.device_probe_scan")
     dev.knn_batch(q, k)
-    assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 1
+    assert _REG.value("launches.device_probe") - walk0 == 1
     # the cross-group scan fallback fires at most ONCE for the whole
     # batch (covering only bailed queries): O(1) launches per batch total
-    assert ops.LAUNCH_COUNTS["device_probe_scan"] - scan0 <= 1
+    assert _REG.value("launches.device_probe_scan") - scan0 <= 1
     # the PR 6 per-z-group shape survives behind probe_fused=False
     grouped = AMIHIndex.build(db, p, probe_backend="device",
                               probe_fused=False)
-    walk0 = ops.LAUNCH_COUNTS["device_probe"]
+    walk0 = _REG.value("launches.device_probe")
     grouped.knn_batch(q, k)
-    assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == groups
+    assert _REG.value("launches.device_probe") - walk0 == groups
 
 
 @pytest.mark.parametrize("p,B", [(32, 1), (32, 8), (64, 8), (64, 64),
@@ -165,11 +166,11 @@ def test_fused_batch_parity_and_single_launch(p, B):
     fused = AMIHIndex.build(db, p, probe_backend="device")
     grouped = AMIHIndex.build(db, p, probe_backend="device",
                               probe_fused=False)
-    walk0 = ops.LAUNCH_COUNTS["device_probe"]
-    scan0 = ops.LAUNCH_COUNTS["device_probe_scan"]
+    walk0 = _REG.value("launches.device_probe")
+    scan0 = _REG.value("launches.device_probe_scan")
     if_, sf = fused.knn_batch(q, k)
-    assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 1
-    assert ops.LAUNCH_COUNTS["device_probe_scan"] - scan0 <= 1
+    assert _REG.value("launches.device_probe") - walk0 == 1
+    assert _REG.value("launches.device_probe_scan") - scan0 <= 1
     ih, sh = host.knn_batch(q, k)
     ig, sg = grouped.knn_batch(q, k)
     np.testing.assert_array_equal(ih, if_)

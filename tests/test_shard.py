@@ -380,6 +380,7 @@ def test_sharded_amih_fused_one_launch_per_device():
         from repro.core import make_engine, linear_scan_knn, pack_bits
         from repro.data import synthetic_binary_codes, synthetic_queries
         from repro.kernels import ops
+        from repro.obs.metrics import REGISTRY as _REG
 
         p, n, B, k = 64, 4000, 16, 5
         db_bits = synthetic_binary_codes(n, p, seed=4)
@@ -389,10 +390,10 @@ def test_sharded_amih_fused_one_launch_per_device():
                           probe_backend="device")
         assert len({str(d) for d in eng.plan.devices}) == 8
         before = dict(ops.LAUNCH_COUNTS_BY_DEVICE)
-        walk0 = ops.LAUNCH_COUNTS["device_probe"]
+        walk0 = _REG.value("launches.device_probe")
         ids, sims, st = eng.knn_batch(qs, k)
         # ONE fused walk launch per device, not one per shard
-        assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 8
+        assert _REG.value("launches.device_probe") - walk0 == 8
         delta = {d: c - before.get(d, 0)
                  for d, c in ops.LAUNCH_COUNTS_BY_DEVICE.items()}
         active = {d for d, c in delta.items() if c > 0}
@@ -413,9 +414,9 @@ def test_sharded_amih_fused_one_launch_per_device():
             _, sims_l = linear_scan_knn(qs[i], db, k)
             np.testing.assert_array_equal(sims[i], sims_l)
         # second batch: super indexes cached, still 8 walk launches
-        walk0 = ops.LAUNCH_COUNTS["device_probe"]
+        walk0 = _REG.value("launches.device_probe")
         ids2, sims2, _ = eng.knn_batch(qs, k)
-        assert ops.LAUNCH_COUNTS["device_probe"] - walk0 == 8
+        assert _REG.value("launches.device_probe") - walk0 == 8
         np.testing.assert_array_equal(ids2, ids)
         print("OK")
     """)

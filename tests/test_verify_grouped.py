@@ -11,6 +11,7 @@ from repro.core import AMIHIndex, make_engine, pack_bits
 from repro.core.packing import hamming_tuples
 from repro.data import synthetic_binary_codes, synthetic_queries
 from repro.kernels import ops
+from repro.obs.metrics import REGISTRY as _REG
 
 
 def _random_workload(rng, B, C, p, n=64):
@@ -128,14 +129,14 @@ def test_amih_one_launch_per_z_group_and_tuple_step():
 
     eng_np = make_engine("amih", db, p, verify_backend="numpy")
     eng_pl = make_engine("amih", db, p, verify_backend="pallas")
-    before = ops.LAUNCH_COUNTS["verify_grouped"]
+    before = _REG.value("launches.verify_grouped")
     ids_n, sims_n, _ = eng_np.knn_batch(qs, k)
     ids_p, sims_p, _ = eng_pl.knn_batch(qs, k)
     np.testing.assert_array_equal(sims_n, sims_p)
 
     # device dispatches == the index's own accounting
     assert (
-        ops.LAUNCH_COUNTS["verify_grouped"] - before
+        _REG.value("launches.verify_grouped") - before
         == eng_pl.index.verify_launches
     )
     # grouped == grouped, whatever the backend
